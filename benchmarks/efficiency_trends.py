@@ -1,0 +1,35 @@
+"""Figs. 1 & 4: performance and normalized-efficiency trends across
+benchmark versions — versions here are this repo's own optimization
+history (baseline -> perf iterations), per hillclimbed workload, plus
+the tiny/edge quantization step, mirroring the per-category trends."""
+from __future__ import annotations
+
+from benchmarks.common import all_cells, cell_energy, csv_row
+from benchmarks.sw_hw_optimizations import PERF_TAGS, _submission
+from repro.core.efficiency import normalized_trend
+
+
+def run() -> dict[str, list]:
+    subs = []
+    for i, tag in enumerate(PERF_TAGS):
+        for rec in all_cells(tag):
+            if rec["mesh"] != "pod":
+                continue
+            subs.append(_submission(rec, "datacenter-v5e", f"v{i}",
+                                    software_id=tag or "base"))
+    # keep only workloads with >1 version (the hillclimbed cells)
+    trend = normalized_trend(subs)
+    return {wl: pts for wl, pts in trend.items() if len(pts) > 1}
+
+
+def csv() -> list[str]:
+    out = []
+    for wl, pts in run().items():
+        series = ";".join(f"{v}={x:.3f}" for v, x in pts)
+        out.append(csv_row(f"fig4_trend[{wl}]", 0.0, series))
+    return out
+
+
+if __name__ == "__main__":
+    for wl, pts in run().items():
+        print(wl, pts)

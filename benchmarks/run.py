@@ -1,0 +1,42 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows aggregated from every benchmark module.
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (accuracy_cost, efficiency_trends,
+                            energy_per_inference, power_range,
+                            quantization_efficiency, roofline_table,
+                            scaling_energy, sw_hw_optimizations,
+                            tiny_edge_measured)
+
+    modules = [
+        ("fig2_power_range", power_range),
+        ("fig4_efficiency_trends", efficiency_trends),
+        ("fig5_scaling_energy", scaling_energy),
+        ("fig6_energy_per_inference", energy_per_inference),
+        ("fig7_accuracy_cost", accuracy_cost),
+        ("fig8_quantization", quantization_efficiency),
+        ("fig9_10_sw_hw", sw_hw_optimizations),
+        ("roofline_table", roofline_table),
+        ("measured_tiny_edge", tiny_edge_measured),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            for row in mod.csv():
+                print(row)
+        except Exception:  # noqa: BLE001 — report all benches
+            failures += 1
+            print(f"{name},0.0,ERROR", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

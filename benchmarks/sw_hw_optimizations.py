@@ -1,0 +1,82 @@
+"""Figs. 9-10: software- vs hardware-isolated efficiency improvements.
+
+(a) Software (Fig. 9/10a): identical "hardware" (v5e constants, same
+    mesh), successive software versions = our own perf iterations
+    (dry-run tags base -> opt*); efficiency delta distribution.
+(b) Hardware (Fig. 10b): constant software stack (the same compiled
+    workload), successive chip generations v4 -> v5e -> v5p.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import all_cells, csv_row, load_cell, work_from_cell
+from repro.core.efficiency import Submission, software_isolated_deltas
+from repro.core.power_model import SystemPowerModel, roofline
+from repro.hw import SYSTEMS
+
+HW_GENS = ["datacenter-v4", "datacenter-v5e", "datacenter-v5p"]
+PERF_TAGS = ["", "opt1", "opt2", "opt3"]       # dry-run variant tags
+
+
+def _submission(rec, system_key: str, version: str,
+                software_id: str) -> Submission:
+    system = SYSTEMS[system_key]
+    work = work_from_cell(rec)
+    model = SystemPowerModel(system, rec["n_devices"])
+    rt = roofline(work, system.chip)
+    from repro.configs import SHAPES
+    sps = SHAPES[rec["shape"]].global_batch / rt.step_s
+    return Submission(
+        version=version, workload=f"{rec['arch']}/{rec['shape']}",
+        scale="datacenter", system_id=system_key, software_id=software_id,
+        samples_per_second=sps,
+        avg_watts=model.system_watts(work, rt.step_s))
+
+
+def run_software() -> list[dict]:
+    subs = []
+    for i, tag in enumerate(PERF_TAGS):
+        for rec in all_cells(tag):
+            if rec["mesh"] != "pod":
+                continue
+            subs.append(_submission(rec, "datacenter-v5e", f"v{i}",
+                                    software_id=tag or "base"))
+    return software_isolated_deltas(subs)
+
+
+def run_hardware() -> list[dict]:
+    rows = []
+    for arch, shape in (("yi-9b", "train_4k"), ("qwen3-1.7b", "prefill_32k")):
+        rec = load_cell(arch, shape, "pod")
+        if rec is None:
+            continue
+        effs = {}
+        for gen in HW_GENS:
+            s = _submission(rec, gen, gen, "fixed-stack")
+            effs[gen] = s.samples_per_joule
+        base = effs[HW_GENS[0]]
+        rows.append({"workload": f"{arch}/{shape}",
+                     **{g: effs[g] / base for g in HW_GENS}})
+    return rows
+
+
+def csv() -> list[str]:
+    out = []
+    sw = run_software()
+    if sw:
+        deltas = [d["delta_pct"] for d in sw]
+        out.append(csv_row(
+            "fig9_sw_isolated", 0.0,
+            f"n={len(deltas)};median_pct={np.median(deltas):.2f};"
+            f"frac_positive={np.mean(np.asarray(deltas) > 0):.2f}"))
+    for r in run_hardware():
+        out.append(csv_row(
+            f"fig10b_hw_isolated[{r['workload']}]", 0.0,
+            ";".join(f"{g.split('-')[1]}={r[g]:.3f}" for g in HW_GENS)))
+    return out
+
+
+if __name__ == "__main__":
+    print("software-isolated deltas:", run_software())
+    print("hardware-isolated:", run_hardware())

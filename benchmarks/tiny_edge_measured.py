@@ -1,0 +1,116 @@
+"""REAL CPU measurements: tiny single-stream and edge offline runs.
+
+Wall-clock µs/call measured on this host's CPU (the only real silicon
+available), paired with the methodology pipeline end to end: loadgen ->
+virtual analyzer / IO manager -> summarizer -> compliance review.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.configs import get_config, reduce_config
+from repro.core import (Clock, IOManager, MLPerfLogger, QuerySampleLibrary,
+                        SystemDescription, TinyPowerModel, review,
+                        run_single_stream, summarize)
+from repro.models import build_model, tiny as tiny_mod
+from repro.models.param import init_params
+
+
+def tiny_single_stream() -> dict:
+    cfg = get_config("tiny-kws")
+    model = tiny_mod.TinyModel(cfg)
+    params = init_params(model.param_defs(), jax.random.PRNGKey(0))
+    fwd = jax.jit(lambda p, x: model(p, x))
+    x = jnp.ones((1, tiny_mod.IN_T, tiny_mod.IN_F))
+    fwd(params, x).block_until_ready()          # compile
+
+    lat = []
+
+    def issue(sample):
+        t0 = time.perf_counter()
+        fwd(params, x).block_until_ready()
+        dt = time.perf_counter() - t0
+        lat.append(dt)
+        return dt
+
+    qsl = QuerySampleLibrary(64, lambda i: {"idx": i})
+    res = run_single_stream(issue, qsl, clock=Clock(), min_queries=200)
+
+    # methodology pipeline on the modeled waveform
+    tm = TinyPowerModel()
+    macs, sram = tiny_mod.macs(cfg), tiny_mod.sram_bytes(cfg)
+    t, amps, pin = tm.waveform(macs, sram, n_inferences=16, period_s=0.1)
+    e_inf, n = IOManager().energy_per_inference(t, amps, pin)
+    return {
+        "name": "tiny_kws_single_stream",
+        "us_per_call": float(np.mean(lat) * 1e6),
+        "p90_us": res.percentile(90) * 1e6,
+        "modeled_mj_per_inf": e_inf * 1e3,
+        "inv_joules": 1.0 / e_inf,
+        "windows": n,
+    }
+
+
+def edge_offline() -> dict:
+    cfg = reduce_config(get_config("edge-vit"))
+    model = build_model(cfg)
+    params = init_params(model.param_defs(), jax.random.PRNGKey(0))
+    b = 8
+    tok = jnp.zeros((b, 8), jnp.int32)
+    pe = jnp.ones((b, cfg.vlm.n_patches, cfg.d_model), jnp.float32)
+    loss_fn = jax.jit(lambda p: model.train_loss(
+        p, {"tokens": tok, "labels": tok, "patch_embeds": pe})[0])
+    loss_fn(params).block_until_ready()
+    times = []
+    for _ in range(10):
+        t0 = time.perf_counter()
+        loss_fn(params).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return {
+        "name": "edge_vit_offline",
+        "us_per_call": float(np.mean(times) * 1e6),
+        "samples_per_s": b / float(np.mean(times)),
+    }
+
+
+def full_pipeline_compliance() -> dict:
+    """End-to-end: synthetic edge run through log->summarize->review."""
+    perf = MLPerfLogger("perf")
+    perf.run_start(0.0)
+    perf.result("samples_processed", 6600, 66_000.0)
+    perf.run_stop(66_000.0)
+    power = MLPerfLogger("power")
+    rng = np.random.default_rng(0)
+    for i in range(661):
+        power.power_sample(i * 100.0, 42.0 + rng.normal(0, 0.5))
+    s = summarize(perf.events, power.events)
+    rep = review(perf.events, power.events, SystemDescription(
+        scale="edge", max_system_watts=60, idle_system_watts=8))
+    return {"name": "edge_pipeline_compliance",
+            "samples_per_joule": s.samples_per_joule,
+            "review_passed": rep.passed}
+
+
+def run() -> list[dict]:
+    return [tiny_single_stream(), edge_offline(),
+            full_pipeline_compliance()]
+
+
+def csv() -> list[str]:
+    out = []
+    for r in run():
+        us = r.get("us_per_call", 0.0)
+        rest = ";".join(f"{k}={v}" for k, v in r.items()
+                        if k not in ("name", "us_per_call"))
+        out.append(csv_row(r["name"], us, rest))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,84 @@
+"""Serving under measurement: batched requests through the ServeEngine,
+driven by the loadgen Offline + Server scenarios, measured by the
+Director/analyzer protocol, summarized to Samples/Joule.
+
+  PYTHONPATH=src python examples/serve_power.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.core import (Clock, Director, QuerySampleLibrary, StepWork,
+                        SystemDescription, SystemPowerModel, review,
+                        run_offline, run_server, summarize)
+from repro.hw import EDGE_SYSTEM
+from repro.models import build_model
+from repro.models.param import init_params
+from repro.serving import Request, ServeEngine
+
+
+def main():
+    cfg = reduce_config(get_config("granite-3-2b"))
+    model = build_model(cfg)
+    params = init_params(model.param_defs(), jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, max_len=96, batch_size=4)
+
+    # real CPU timing of one batch (prefill + 8 decode steps)
+    key = jax.random.PRNGKey(1)
+
+    def make_batch(i):
+        return [Request(rid=i * 4 + j,
+                        prompt=jax.random.randint(
+                            jax.random.fold_in(key, i * 4 + j), (16,),
+                            0, cfg.vocab_size),
+                        max_new_tokens=8) for j in range(4)]
+
+    engine.run_batch(make_batch(0))               # warmup/compile
+
+    def issue_batch(samples):
+        t0 = time.perf_counter()
+        engine.run_batch(make_batch(samples[0]["idx"]))
+        return time.perf_counter() - t0
+
+    qsl = QuerySampleLibrary(32, lambda i: {"idx": i})
+    offline = run_offline(issue_batch, qsl, batch=4, clock=Clock(),
+                          min_duration_s=60.0)
+    print(f"Offline: {offline.n_queries} queries, "
+          f"{offline.qps:.2f} samples/s, p90 {offline.p90 * 1e3:.1f} ms")
+
+    server, slo_ok = run_server(
+        lambda s: issue_batch([s]) / 4, qsl, target_qps=offline.qps * 0.6,
+        latency_slo_s=10.0, clock=Clock())
+    print(f"Server:  {server.qps:.2f} qps, p99 {server.p99 * 1e3:.1f} ms, "
+          f"SLO met: {slo_ok}")
+
+    # Director-measured energy for the offline run
+    meter = SystemPowerModel(EDGE_SYSTEM, 1)
+    work = StepWork(flops=2.0 * cfg.param_count() * 24,
+                    hbm_bytes=2.0 * cfg.param_count())
+    watts = meter.system_watts(work)
+    d = Director(seed=0)
+
+    def sut_run(log):
+        log.run_start(0.0)
+        log.result("samples_processed", offline.n_queries,
+                   offline.duration_s * 1e3)
+        log.run_stop(offline.duration_s * 1e3)
+        return offline.duration_s
+
+    perf_log, power_log = d.run_measurement(
+        sut_run=sut_run, power_source=lambda t: np.full_like(t, watts))
+    s = summarize(perf_log.events, power_log.events)
+    print(f"energy: {s.energy_j:.1f} J -> "
+          f"{s.samples_per_joule:.4f} samples/J")
+    rep = review(perf_log.events, power_log.events,
+                 SystemDescription(scale="edge", max_system_watts=60,
+                                   idle_system_watts=8))
+    print(rep.render())
+
+
+if __name__ == "__main__":
+    main()

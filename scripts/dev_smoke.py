@@ -1,0 +1,55 @@
+"""Dev-loop smoke: one fwd/train-loss per reduced arch on CPU."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduce_config
+from repro.models import build_model
+from repro.models.param import init_params
+
+
+def batch_for(cfg, b=2, s=64):
+    key = jax.random.PRNGKey(0)
+    tok = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": tok, "labels": tok}
+    if cfg.vlm is not None:
+        n_p = cfg.vlm.n_patches
+        batch["tokens"] = tok[:, : s - n_p]
+        batch["labels"] = tok[:, : s - n_p]
+        batch["patch_embeds"] = jnp.ones((b, n_p, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.ones((b, cfg.encdec.enc_len, cfg.d_model),
+                                   jnp.float32)
+    return batch
+
+
+def main():
+    archs = sys.argv[1:] or ASSIGNED_ARCHS
+    for arch in archs:
+        cfg = reduce_config(get_config(arch))
+        model = build_model(cfg)
+        params = init_params(model.param_defs(), jax.random.PRNGKey(1))
+        batch = batch_for(cfg)
+        loss, metrics = jax.jit(model.train_loss)(params, batch)
+        assert jnp.isfinite(loss), (arch, loss)
+        # prefill + 2 decode steps
+        if cfg.family == "encdec":
+            inputs = {"frames": batch["frames"], "tokens": batch["tokens"]}
+        else:
+            inputs = {k: batch[k] for k in ("tokens", "patch_embeds")
+                      if k in batch}
+        logits, cache = jax.jit(
+            lambda p, i: model.prefill(p, i, max_len=96))(params, inputs)
+        assert jnp.isfinite(logits).all(), arch
+        step = jax.jit(model.decode_step)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        for _ in range(2):
+            logits, cache = step(params, cache, tok)
+            assert jnp.isfinite(logits).all(), arch
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        print(f"OK {arch}: loss={float(loss):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.supervisor import (  # noqa: F401
+    SimulatedFailure, StragglerMonitor, run_with_recovery,
+)

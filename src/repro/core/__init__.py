@@ -1,0 +1,25 @@
+# The paper's primary contribution: the MLPerf Power measurement
+# methodology — virtual instruments, loadgen scenarios, Director/SUT
+# protocol, standardized logging, energy summarization, compliance.
+from repro.core.power_model import (  # noqa: F401
+    RooflineTimes, StepWork, SystemPowerModel, TinyPowerModel, roofline,
+)
+from repro.core.analyzer import (  # noqa: F401
+    AnalyzerSpec, IOManager, NodeTelemetry, SwitchEstimator,
+    TelemetrySpec, VirtualAnalyzer,
+)
+from repro.core.loadgen import (  # noqa: F401
+    Clock, LoadgenResult, QuerySampleLibrary, loops_for_min_duration,
+    run_offline, run_server, run_single_stream,
+)
+from repro.core.director import Director, NTPSync, PTDSession  # noqa: F401
+from repro.core.mlperf_log import (  # noqa: F401
+    LogEvent, MLPerfLogger, find_window,
+)
+from repro.core.summarizer import (  # noqa: F401
+    EnergySummary, energy_to_train, summarize,
+)
+from repro.core.compliance import (  # noqa: F401
+    ReviewReport, SystemDescription, review,
+)
+from repro.core import efficiency  # noqa: F401

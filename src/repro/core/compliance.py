@@ -1,0 +1,152 @@
+"""Compliance checker: the paper's validation & review rules (§IV-D).
+
+Checks a submission (perf log + power log + system description) against
+the measurement rules and produces a review report:
+
+  R1  measurement window covers >= min_duration (60 s)
+  R2  sampling rate >= required minimum for the scale
+  R3  power samples span the whole execution window (no gaps > 2/rate)
+  R4  instrument is SPEC-approved (edge) / documented accuracy (DC)
+  R5  full-system scope declared (chips + host + interconnect)
+  R6  estimation methodologies disclosed for any estimated component
+  R7  energy consistency: avg power within declared system envelope
+  R8  range-mode (two-pass) used for analyzer measurements < 75 W
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.mlperf_log import LogEvent, find_window
+
+MIN_DURATION_S = 60.0
+MIN_SAMPLE_HZ = {"tiny": 1000.0, "edge": 1.0, "datacenter": 0.5}
+
+
+@dataclasses.dataclass
+class Check:
+    rule: str
+    passed: bool
+    detail: str
+
+
+@dataclasses.dataclass
+class SystemDescription:
+    scale: str                           # tiny | edge | datacenter
+    n_chips: int = 1
+    instrument: str = "virtual-wt310"
+    instrument_spec_approved: bool = True
+    telemetry_accuracy: Optional[float] = None
+    scope: tuple = ("chips", "host")
+    estimated_components: dict = dataclasses.field(default_factory=dict)
+    max_system_watts: Optional[float] = None
+    idle_system_watts: float = 0.0
+
+
+@dataclasses.dataclass
+class ReviewReport:
+    checks: list[Check]
+
+    @property
+    def passed(self) -> bool:
+        return all(c.passed for c in self.checks)
+
+    def failures(self) -> list[Check]:
+        return [c for c in self.checks if not c.passed]
+
+    def render(self) -> str:
+        lines = ["MLPerf Power compliance review:"]
+        for c in self.checks:
+            lines.append(f"  [{'PASS' if c.passed else 'FAIL'}] "
+                         f"{c.rule}: {c.detail}")
+        lines.append(f"  => {'ACCEPTED' if self.passed else 'REJECTED'}")
+        return "\n".join(lines)
+
+
+def review(perf_events: list[LogEvent], power_events: list[LogEvent],
+           sysdesc: SystemDescription, *,
+           min_duration_s: float = MIN_DURATION_S,
+           range_mode_used: bool = True) -> ReviewReport:
+    checks: list[Check] = []
+    start_ms, stop_ms = find_window(perf_events)
+    window_s = (stop_ms - start_ms) / 1e3
+
+    checks.append(Check(
+        "R1 min-duration", window_s >= min_duration_s - 1e-6,
+        f"window {window_s:.1f}s vs required {min_duration_s:.0f}s"))
+
+    ts = np.sort(np.asarray([ev.time_ms for ev in power_events
+                             if ev.key == "power_w"]))
+    in_win = ts[(ts >= start_ms) & (ts <= stop_ms)]
+    nodes = {(ev.metadata or {}).get("node", "sut")
+             for ev in power_events if ev.key == "power_w"}
+    n_nodes = max(1, len(nodes))
+    if len(in_win) >= 2:
+        rate = (len(in_win) / n_nodes) / max(window_s, 1e-9)
+        need = MIN_SAMPLE_HZ[sysdesc.scale]
+        checks.append(Check("R2 sampling-rate", rate >= need * 0.99,
+                            f"{rate:.2f} Hz/node vs required {need} Hz"))
+        # gap check on a single node's samples
+        node0 = sorted(nodes)[0]
+        ts0 = np.sort(np.asarray([ev.time_ms for ev in power_events
+                                  if ev.key == "power_w" and
+                                  (ev.metadata or {}).get("node", "sut")
+                                  == node0]))
+        ts0 = ts0[(ts0 >= start_ms) & (ts0 <= stop_ms)]
+        max_gap = float(np.max(np.diff(ts0))) / 1e3 if len(ts0) > 1 else 1e9
+        allowed = 2.0 / MIN_SAMPLE_HZ[sysdesc.scale]
+        cover = ((ts0[0] - start_ms) / 1e3 <= allowed and
+                 (stop_ms - ts0[-1]) / 1e3 <= allowed)
+        checks.append(Check("R3 coverage",
+                            max_gap <= allowed * 1.5 and cover,
+                            f"max gap {max_gap * 1e3:.1f} ms, "
+                            f"edges covered={cover}"))
+    else:
+        checks.append(Check("R2 sampling-rate", False, "no samples"))
+        checks.append(Check("R3 coverage", False, "no samples"))
+
+    if sysdesc.scale in ("edge", "tiny"):
+        checks.append(Check("R4 instrument",
+                            sysdesc.instrument_spec_approved,
+                            f"{sysdesc.instrument} SPEC-approved="
+                            f"{sysdesc.instrument_spec_approved}"))
+    else:
+        ok = sysdesc.telemetry_accuracy is not None \
+            and sysdesc.telemetry_accuracy <= 0.05
+        checks.append(Check("R4 instrument", ok,
+                            f"telemetry accuracy documented: "
+                            f"{sysdesc.telemetry_accuracy}"))
+
+    full = {"chips", "host"} <= set(sysdesc.scope)
+    checks.append(Check("R5 full-system scope", full,
+                        f"scope={sysdesc.scope}"))
+
+    est_ok = all(bool(v) for v in sysdesc.estimated_components.values())
+    checks.append(Check(
+        "R6 estimation disclosure",
+        est_ok, f"estimated={list(sysdesc.estimated_components)}"
+                " (all documented)" if sysdesc.estimated_components
+        else "no estimated components"))
+
+    w = [float(ev.value) for ev in power_events if ev.key == "power_w"
+         and start_ms <= ev.time_ms <= stop_ms]
+    if w and sysdesc.max_system_watts:
+        avg = float(np.mean(w)) * (n_nodes if len(nodes) > 1 else 1)
+        envelope_ok = (sysdesc.idle_system_watts * 0.5 <= avg
+                       <= sysdesc.max_system_watts * 1.1)
+        checks.append(Check("R7 consistency", envelope_ok,
+                            f"avg {avg:.1f} W within "
+                            f"[{sysdesc.idle_system_watts * 0.5:.0f}, "
+                            f"{sysdesc.max_system_watts * 1.1:.0f}] W"))
+    else:
+        checks.append(Check("R7 consistency", True,
+                            "no envelope declared (skipped)"))
+
+    if w and float(np.mean(w)) < 75.0 and sysdesc.scale == "edge":
+        checks.append(Check("R8 range-mode", range_mode_used,
+                            "sub-75W device: fixed ranges required"))
+    else:
+        checks.append(Check("R8 range-mode", True, "not applicable"))
+    return ReviewReport(checks)

@@ -1,0 +1,93 @@
+"""Director / SUT orchestration (edge & datacenter inference, §IV-B).
+
+The Director (server) NTP-syncs with the SUT (client), starts the PTD
+(power-thermal daemon) session against the analyzer, commands the SUT
+to run loadgen, collects both logs, and hands them to the summarizer.
+Everything runs in-process here, but the protocol steps, clock-offset
+correction, and the two-pass range mode are the real ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.analyzer import VirtualAnalyzer
+from repro.core.mlperf_log import MLPerfLogger
+
+
+@dataclasses.dataclass
+class NTPSync:
+    """Simulated clock offset between Director and SUT."""
+
+    true_offset_ms: float = 37.0
+    residual_ms: float = 0.5          # post-sync residual error
+
+    def sync(self, rng: Optional[np.random.Generator] = None) -> float:
+        rng = rng or np.random.default_rng(0)
+        measured = self.true_offset_ms + rng.normal(0, self.residual_ms)
+        return measured
+
+
+@dataclasses.dataclass
+class PTDSession:
+    """Power-Thermal Daemon API facade around the analyzer."""
+
+    analyzer: VirtualAnalyzer
+    connected: bool = False
+
+    def connect(self):
+        self.connected = True
+        return {"device": self.analyzer.spec.name,
+                "spec_approved": self.analyzer.spec.spec_approved}
+
+    def set_range(self, watts: float):
+        self.analyzer.fixed_range = watts
+
+    def start_logging(self):
+        assert self.connected, "PTD not connected"
+
+    def stop_logging(self):
+        pass
+
+
+class Director:
+    def __init__(self, analyzer: Optional[VirtualAnalyzer] = None,
+                 seed: int = 0):
+        self.analyzer = analyzer or VirtualAnalyzer(seed=seed)
+        self.ptd = PTDSession(self.analyzer)
+        self.perf_log = MLPerfLogger("perf")
+        self.power_log = MLPerfLogger("power")
+        self.clock_offset_ms = 0.0
+        self.rng = np.random.default_rng(seed)
+
+    def run_measurement(
+        self, *,
+        sut_run: Callable[[MLPerfLogger], float],
+        power_source: Callable[[np.ndarray], np.ndarray],
+        range_mode: bool = True,
+        probe_duration_s: float = 5.0,
+    ) -> tuple[MLPerfLogger, MLPerfLogger]:
+        """Full protocol: NTP sync -> PTD connect -> (range probe) ->
+        loadgen run with concurrent power logging.
+
+        ``sut_run(perf_log) -> duration_s`` executes the workload and
+        writes run_start/run_stop + results into the perf log (in SUT
+        clock).  ``power_source(t) -> watts`` is the SUT's power draw.
+        """
+        offset = NTPSync().sync(self.rng)
+        self.clock_offset_ms = offset
+        self.ptd.connect()
+        if range_mode:
+            self.analyzer.range_probe(power_source, probe_duration_s)
+        self.ptd.start_logging()
+        duration = sut_run(self.perf_log)
+        # analyzer samples in Director clock; correct by the sync offset
+        self.analyzer.measure(power_source, duration,
+                              t0_ms=-offset, logger=self.power_log)
+        self.ptd.stop_logging()
+        # shift power samples into SUT clock for the summarizer
+        for ev in self.power_log.events:
+            ev.time_ms += offset
+        return self.perf_log, self.power_log

@@ -1,0 +1,140 @@
+"""Load generator: MLPerf Inference scenarios.
+
+- ``SingleStream``: one query at a time, latency-bound (tiny/edge).
+- ``Offline``: all samples issued at once, throughput-bound.
+- ``Server``: Poisson arrivals at a target QPS with latency SLO.
+
+Implements the paper's minimum-duration rule: workloads shorter than
+``min_duration_s`` (60 s by default) are looped until the threshold is
+reached (§IV-A, principle four).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import numpy as np
+
+MIN_DURATION_S = 60.0
+
+
+@dataclasses.dataclass
+class QuerySampleLibrary:
+    """Deterministic sample library (the QSL)."""
+
+    n_samples: int
+    make_sample: Callable[[int], dict]
+
+    def sample(self, idx: int) -> dict:
+        return self.make_sample(idx % self.n_samples)
+
+
+@dataclasses.dataclass
+class LoadgenResult:
+    scenario: str
+    n_queries: int
+    duration_s: float
+    latencies_s: np.ndarray
+    qps: float
+    min_duration_met: bool
+
+    def percentile(self, p: float) -> float:
+        return float(np.percentile(self.latencies_s, p))
+
+    @property
+    def p50(self):
+        return self.percentile(50)
+
+    @property
+    def p90(self):
+        return self.percentile(90)
+
+    @property
+    def p99(self):
+        return self.percentile(99)
+
+
+class Clock:
+    """Virtual clock so 60 s runs don't take 60 s of CPU in tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float):
+        self.t += dt
+
+
+def run_single_stream(issue: Callable[[dict], float], qsl: QuerySampleLibrary,
+                      *, min_duration_s: float = MIN_DURATION_S,
+                      min_queries: int = 64,
+                      clock: Optional[Clock] = None) -> LoadgenResult:
+    """``issue(sample) -> latency_s`` (the SUT runs one query)."""
+    clock = clock or Clock()
+    lat = []
+    i = 0
+    t0 = clock.now()
+    while (clock.now() - t0 < min_duration_s) or (i < min_queries):
+        dt = issue(qsl.sample(i))
+        lat.append(dt)
+        clock.advance(dt)
+        i += 1
+    dur = clock.now() - t0
+    return LoadgenResult("SingleStream", i, dur, np.asarray(lat),
+                         qps=i / dur, min_duration_met=dur >= min_duration_s)
+
+
+def run_offline(issue_batch: Callable[[list[dict]], float],
+                qsl: QuerySampleLibrary, *, batch: int,
+                min_duration_s: float = MIN_DURATION_S,
+                clock: Optional[Clock] = None) -> LoadgenResult:
+    """``issue_batch(samples) -> seconds``; loops batches to 60 s."""
+    clock = clock or Clock()
+    t0 = clock.now()
+    n = 0
+    times = []
+    while clock.now() - t0 < min_duration_s or n == 0:
+        dt = issue_batch([qsl.sample(n + j) for j in range(batch)])
+        clock.advance(dt)
+        times.append(dt)
+        n += batch
+    dur = clock.now() - t0
+    per_sample = np.repeat(np.asarray(times) / batch, batch)
+    return LoadgenResult("Offline", n, dur, per_sample, qps=n / dur,
+                         min_duration_met=dur >= min_duration_s)
+
+
+def run_server(issue: Callable[[dict], float], qsl: QuerySampleLibrary, *,
+               target_qps: float, latency_slo_s: float,
+               min_duration_s: float = MIN_DURATION_S,
+               seed: int = 0,
+               clock: Optional[Clock] = None) -> tuple[LoadgenResult, bool]:
+    """Poisson arrivals; returns (result, slo_met at p99)."""
+    rng = np.random.default_rng(seed)
+    clock = clock or Clock()
+    t0 = clock.now()
+    lat = []
+    i = 0
+    next_free = t0
+    t_arrive = t0
+    while t_arrive - t0 < min_duration_s or i < 32:
+        t_arrive += rng.exponential(1.0 / target_qps)
+        service = issue(qsl.sample(i))
+        start = max(t_arrive, next_free)          # queueing
+        next_free = start + service
+        lat.append(next_free - t_arrive)
+        i += 1
+    clock.advance(next_free - t0)
+    dur = next_free - t0
+    res = LoadgenResult("Server", i, dur, np.asarray(lat), qps=i / dur,
+                        min_duration_met=dur >= min_duration_s)
+    return res, res.p99 <= latency_slo_s
+
+
+def loops_for_min_duration(workload_s: float,
+                           min_duration_s: float = MIN_DURATION_S) -> int:
+    """How many times to loop a short workload (paper §IV-A)."""
+    return max(1, math.ceil(min_duration_s / max(workload_s, 1e-9)))

@@ -1,0 +1,110 @@
+"""Result summarizer: align logs, integrate energy, compute metrics.
+
+Implements the paper's §IV-C pipeline: find the run_start/run_stop
+window in the performance log, select the power samples inside it
+(per node), trapezoidally integrate each node's power over the window,
+sum across nodes (+ documented switch estimates) for energy-to-train,
+and derive the unified efficiency metrics of §IV-A:
+
+  throughput benchmarks: Samples/s, Watts, Samples/Joule
+  latency benchmarks (tiny): energy per inference, 1/Joules
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Optional
+
+import numpy as np
+
+from repro.core.mlperf_log import LogEvent, MLPerfLogger, find_window
+
+
+def _trapz(y: np.ndarray, x: np.ndarray) -> float:
+    if hasattr(np, "trapezoid"):
+        return float(np.trapezoid(y, x))
+    return float(np.trapz(y, x))
+
+
+@dataclasses.dataclass
+class EnergySummary:
+    window_s: float
+    energy_j: float
+    avg_watts: float
+    per_node_j: dict
+    n_samples: int
+    samples_processed: Optional[float] = None
+    samples_per_joule: Optional[float] = None
+    samples_per_second: Optional[float] = None
+    inv_joules: Optional[float] = None          # tiny metric (1/J)
+    switch_energy_j: float = 0.0
+    notes: tuple = ()
+
+
+def summarize(perf_events: list[LogEvent], power_events: list[LogEvent],
+              *, switch_estimate: Optional[dict] = None) -> EnergySummary:
+    start_ms, stop_ms = find_window(perf_events)
+    window_s = (stop_ms - start_ms) / 1e3
+
+    by_node: dict[str, list[tuple[float, float]]] = defaultdict(list)
+    for ev in power_events:
+        if ev.key != "power_w":
+            continue
+        node = (ev.metadata or {}).get("node", "sut")
+        by_node[node].append((ev.time_ms, float(ev.value)))
+
+    per_node_j = {}
+    n_samples = 0
+    for node, samples in by_node.items():
+        samples.sort()
+        t = np.asarray([s[0] for s in samples])
+        w = np.asarray([s[1] for s in samples])
+        sel = (t >= start_ms) & (t <= stop_ms)
+        n_samples += int(sel.sum())
+        if sel.sum() < 2:
+            per_node_j[node] = 0.0
+            continue
+        per_node_j[node] = _trapz(w[sel], t[sel] / 1e3)
+    energy = float(sum(per_node_j.values()))
+
+    notes = []
+    switch_j = 0.0
+    if switch_estimate is not None:
+        switch_j = float(switch_estimate["watts"]) * window_s
+        energy += switch_j
+        notes.append(f"switch power estimated: "
+                     f"{switch_estimate['methodology']}")
+
+    # results reported by the SUT in the perf log
+    processed = None
+    for ev in perf_events:
+        if ev.key in ("samples_processed", "result_samples"):
+            processed = float(ev.value)
+
+    summary = EnergySummary(
+        window_s=window_s, energy_j=energy,
+        avg_watts=energy / max(window_s, 1e-12),
+        per_node_j=dict(per_node_j), n_samples=n_samples,
+        samples_processed=processed, switch_energy_j=switch_j,
+        notes=tuple(notes))
+    if processed:
+        summary.samples_per_second = processed / window_s
+        summary.samples_per_joule = processed / energy
+        summary.inv_joules = processed / energy   # = 1/(J per inference)
+    return summary
+
+
+def energy_to_train(perf_events: list[LogEvent],
+                    node_logs: dict[str, list[LogEvent]],
+                    *, switch_estimate: Optional[dict] = None
+                    ) -> EnergySummary:
+    """Training/HPC variant: one power log per node, summed (§IV-C)."""
+    merged: list[LogEvent] = []
+    for node, events in node_logs.items():
+        for ev in events:
+            if ev.key == "power_w":
+                md = dict(ev.metadata or {})
+                md["node"] = node
+                merged.append(LogEvent(ev.key, ev.value, ev.time_ms,
+                                       ev.namespace, md))
+    return summarize(perf_events, merged, switch_estimate=switch_estimate)

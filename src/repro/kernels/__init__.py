@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the compute hot-spots the benchmarked
+# workloads are dominated by (and whose quantization variant the paper's
+# Fig. 8 analysis measures):
+#   flash_attention/   causal GQA flash attention (train/prefill)
+#   decode_attention/  split-KV one-token decode (flash-decoding on TPU)
+#   int8_matmul/       W8A8 GEMM + per-channel dequant epilogue
+#   linear_scan/       RWKV-6 chunked data-dependent-decay scan
+# Each: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
+# ref.py (pure-jnp oracle).  Validated in interpret mode on CPU.

@@ -1,0 +1,32 @@
+"""jit'd wrapper: model-layout decode attention against a KV cache."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_kernel,
+)
+
+
+@partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, pos, *, block_k: int = 512,
+                     interpret: bool = False):
+    """q: (B, 1, H, D); caches: (B, S, KVH, D); pos: scalar int32.
+    Returns (B, 1, H, D)."""
+    b, _, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    qr = q[:, 0].reshape(b, kvh, g, d).reshape(b * kvh, g, d)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+    pk = (-s) % block_k
+    if pk:
+        kr = jnp.pad(kr, ((0, 0), (0, pk), (0, 0)))
+        vr = jnp.pad(vr, ((0, 0), (0, pk), (0, 0)))
+    o = decode_attention_kernel(qr, kr, vr, pos, block_k=block_k,
+                                interpret=interpret)
+    return o.reshape(b, kvh, g, d).reshape(b, h, d)[:, None].transpose(
+        0, 1, 2, 3).reshape(b, 1, h, d)

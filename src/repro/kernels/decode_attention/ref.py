@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for split-KV decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos) -> jax.Array:
+    """q: (BH, G, D); k, v: (BH, S, D); attends to positions <= pos."""
+    d = q.shape[-1]
+    s = jnp.einsum("bgd,bkd->bgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    mask = jnp.arange(k.shape[1]) <= pos
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgk,bkd->bgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    """q: (BH, G, Sq, D); k, v: (BH, Skv, D) — plain softmax attention."""
+    bh, g, sq, d = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bgqd,bkd->bgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(skv)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgqk,bkd->bgqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.int8_matmul.ops import int8_matmul, quantize_int8  # noqa: F401
+from repro.kernels.int8_matmul.ref import int8_matmul_ref  # noqa: F401

@@ -1,0 +1,38 @@
+"""jit'd wrapper + quantization helper for the W8A8 path."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_matmul.int8_matmul import int8_matmul_kernel
+
+
+def quantize_int8(x, axis: int = -1):
+    """Symmetric per-row/col int8 quantization -> (q, scale_f32)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                   "out_dtype", "interpret"))
+def int8_matmul(x, w, sx, sw, *, block_m: int = 256, block_n: int = 256,
+                block_k: int = 256, out_dtype=jnp.bfloat16,
+                interpret: bool = False):
+    """Padded W8A8 GEMM: x (M,K) int8 @ w (K,N) int8 -> (M,N) out_dtype."""
+    m, k = x.shape
+    n = w.shape[1]
+    pm, pn, pk = (-m) % block_m, (-n) % block_n, (-k) % block_k
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+        sx = jnp.pad(sx, ((0, pm), (0, 0)), constant_values=1.0)
+    if pn or pk:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+        sw = jnp.pad(sw, ((0, 0), (0, pn)), constant_values=1.0)
+    o = int8_matmul_kernel(x, w, sx, sw, block_m=block_m, block_n=block_n,
+                           block_k=block_k, out_dtype=out_dtype,
+                           interpret=interpret)
+    return o[:m, :n]

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the int8 GEMM + dequant epilogue."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x, w, sx, sw, out_dtype=jnp.bfloat16):
+    acc = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+    return (acc.astype(jnp.float32) * sx * sw).astype(out_dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.linear_scan.ops import linear_scan  # noqa: F401
+from repro.kernels.linear_scan.ref import linear_scan_ref  # noqa: F401

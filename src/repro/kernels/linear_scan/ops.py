@@ -1,0 +1,24 @@
+"""jit'd wrapper for the RWKV-6 linear scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.linear_scan.linear_scan import linear_scan_kernel
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def linear_scan(r, k, v, logw, u, *, chunk: int = 64,
+                interpret: bool = False):
+    """Model layout: r/k/v/logw (B, T, H, dh); u (H, dh).
+    Returns y (B, T, H, dh), state (B, H, dh, dh) f32."""
+    b, t, h, dh = r.shape
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+
+    u_r = jax.numpy.broadcast_to(u[None], (b, h, dh)).reshape(b * h, 1, dh)
+    y, s = linear_scan_kernel(fold(r), fold(k), fold(v), fold(logw), u_r,
+                              chunk=chunk, interpret=interpret)
+    y = y.reshape(b, h, t, dh).transpose(0, 2, 1, 3)
+    return y, s.reshape(b, h, dh, dh)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: literal per-token RWKV-6 recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(r, k, v, logw, u):
+    """r/k/v/logw: (BH, T, dh); u: (BH, 1, dh).
+    Literal sequential recurrence (no chunking) in f64-safe f32."""
+    bh, t, dh = r.shape
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)[:, 0]
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs                     # (BH, dh) each
+        kv = jnp.einsum("bd,be->bde", k_t, v_t)
+        y = jnp.einsum("bd,bde->be", r_t,
+                       S + uf[..., None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    S0 = jnp.zeros((bh, dh, dh), jnp.float32)
+    xs = (rf.transpose(1, 0, 2), kf.transpose(1, 0, 2),
+          vf.transpose(1, 0, 2), w.transpose(1, 0, 2))
+    S, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2).astype(r.dtype), S

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — required for the dry-run, which
+must set XLA_FLAGS before the first jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: 16x16 (data, model) = 256 chips.
+    Multi-pod: 2x16x16 (pod, data, model) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh (scaling studies, tests, pipeline stages)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """Whatever this host actually has (tests/examples on CPU)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,104 @@
+"""Serving launcher: ``--arch <id>``, loadgen scenario, Director-
+measured Samples/Joule.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
+      --reduce --scenario offline
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, list_archs, reduce_config
+from repro.core import (Clock, Director, QuerySampleLibrary, StepWork,
+                        SystemDescription, SystemPowerModel, review,
+                        run_offline, run_server, run_single_stream,
+                        summarize)
+from repro.hw import EDGE_SYSTEM
+from repro.models import build_model
+from repro.models.param import init_params
+from repro.serving import Request, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--scenario", default="offline",
+                    choices=["offline", "server", "single-stream"])
+    ap.add_argument("--reduce", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--min-duration", type=float, default=60.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = reduce_config(cfg)
+    model = build_model(cfg)
+    params = init_params(model.param_defs(), jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, max_len=64, batch_size=args.batch)
+    key = jax.random.PRNGKey(1)
+
+    def make_reqs(i):
+        return [Request(rid=i + j,
+                        prompt=jax.random.randint(
+                            jax.random.fold_in(key, i + j), (16,), 0,
+                            cfg.vocab_size),
+                        max_new_tokens=args.new_tokens)
+                for j in range(args.batch)]
+
+    engine.run_batch(make_reqs(0))             # compile
+
+    def issue_batch(samples):
+        t0 = time.perf_counter()
+        engine.run_batch(make_reqs(samples[0]["idx"]))
+        return time.perf_counter() - t0
+
+    qsl = QuerySampleLibrary(64, lambda i: {"idx": i})
+    if args.scenario == "offline":
+        res = run_offline(issue_batch, qsl, batch=args.batch, clock=Clock(),
+                          min_duration_s=args.min_duration)
+        slo = None
+    elif args.scenario == "server":
+        res, slo = run_server(lambda s: issue_batch([s]) / args.batch, qsl,
+                              target_qps=4.0, latency_slo_s=10.0,
+                              clock=Clock(),
+                              min_duration_s=args.min_duration)
+    else:
+        res = run_single_stream(lambda s: issue_batch([s]), qsl,
+                                clock=Clock(),
+                                min_duration_s=args.min_duration)
+        slo = None
+    print(f"{res.scenario}: {res.n_queries} queries, {res.qps:.2f}/s, "
+          f"p90 {res.p90 * 1e3:.1f} ms" +
+          (f", SLO met: {slo}" if slo is not None else ""))
+
+    meter = SystemPowerModel(EDGE_SYSTEM, 1)
+    watts = meter.system_watts(StepWork(
+        flops=2.0 * cfg.param_count() * res.qps,
+        hbm_bytes=2.0 * cfg.param_count() * res.qps / 8))
+    d = Director(seed=0)
+
+    def sut_run(log):
+        log.run_start(0.0)
+        log.result("samples_processed", res.n_queries,
+                   res.duration_s * 1e3)
+        log.run_stop(res.duration_s * 1e3)
+        return res.duration_s
+
+    pl_, pw = d.run_measurement(
+        sut_run=sut_run, power_source=lambda t: np.full_like(t, watts))
+    s = summarize(pl_.events, pw.events)
+    print(f"{s.energy_j:.1f} J -> {s.samples_per_joule:.4f} samples/J")
+    rep = review(pl_.events, pw.events,
+                 SystemDescription(scale="edge", max_system_watts=60,
+                                   idle_system_watts=8),
+                 min_duration_s=args.min_duration)
+    print(rep.render())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Training launcher: ``--arch <id>`` selects any assigned architecture.
+
+Runs on whatever devices the host exposes (CPU here, TPU pod in prod):
+builds the host mesh, shards the (optionally reduced) model, and trains
+with checkpointing, failure recovery and MLPerf power logging.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+      --reduce --steps 20 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, run_with_recovery
+from repro.configs import get_config, list_archs, reduce_config
+from repro.core import (MLPerfLogger, StepWork, SwitchEstimator,
+                        SystemDescription, SystemPowerModel, review)
+from repro.core.summarizer import energy_to_train
+from repro.data import SyntheticTokens, batch_for_shape
+from repro.hw import DATACENTER_V5E
+from repro.models import build_model
+from repro.parallel.sharding import make_rules
+from repro.train import init_train_state, make_train_step
+from repro.train.train_step import TrainHParams
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduce", action="store_true",
+                    help="smoke-scale config (CPU-friendly)")
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--quant-opt", action="store_true",
+                    help="int8-m / bf16-sqrt-v optimizer states")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = reduce_config(cfg)
+    model = build_model(cfg)
+    print(f"arch={cfg.name} params={cfg.param_count() / 1e6:.1f}M "
+          f"(reduced={args.reduce})")
+
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(model=args.model_axis)
+    rules = make_rules(cfg, mesh, "train") if len(jax.devices()) > 1 else None
+
+    from repro.optim import AdamWConfig
+    hp = TrainHParams(total_steps=args.steps, warmup=max(2, args.steps // 10),
+                      adamw=AdamWConfig(quant_moments=args.quant_opt))
+    state = init_train_state(model, jax.random.PRNGKey(0), hp)
+    step = jax.jit(make_train_step(model, hp, rules))
+    data = SyntheticTokens(cfg.vocab_size, args.seq, args.batch)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+
+    n_chips = max(1, len(jax.devices()))
+    meter = SystemPowerModel(DATACENTER_V5E, n_chips)
+    work = StepWork(
+        flops=6.0 * cfg.param_count() * args.batch * args.seq / n_chips,
+        hbm_bytes=16.0 * cfg.param_count() / n_chips)
+    watts = meter.system_watts(work)
+
+    perf, node = MLPerfLogger("perf"), MLPerfLogger("power")
+    t0 = time.monotonic()
+    perf.run_start(0.0)
+
+    def on_step(s, metrics):
+        node.power_sample((time.monotonic() - t0) * 1e3, watts,
+                          node="node0")
+        if s % 5 == 0:
+            print(f"step {s}: loss={float(metrics['loss']):.4f}")
+
+    state, rep = run_with_recovery(
+        state=state, step_fn=step, data_fn=data.batch, ckpt=ckpt,
+        total_steps=args.steps, ckpt_every=max(5, args.steps // 4),
+        on_step=on_step)
+    dur_ms = (time.monotonic() - t0) * 1e3
+    perf.result("samples_processed", args.steps * args.batch, dur_ms)
+    perf.run_stop(dur_ms)
+
+    s = energy_to_train(perf.events, {"node0": node.events},
+                        switch_estimate=SwitchEstimator().estimate(
+                            n_chips, dur_ms / 1e3))
+    print(f"energy-to-train (modeled): {s.energy_j:.1f} J, "
+          f"avg {s.avg_watts:.0f} W, {s.window_s:.1f} s")
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Model zoo entry point: ``build_model(cfg)``."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    if cfg.family == "tiny":
+        from repro.models.tiny import TinyModel
+        return TinyModel(cfg)
+    from repro.models.lm import LM
+    return LM(cfg)

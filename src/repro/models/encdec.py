@@ -1,0 +1,258 @@
+"""Encoder-decoder model (whisper-small backbone).
+
+The conv/mel frontend is a STUB per the assignment: inputs provide
+precomputed frame embeddings (B, enc_len, d_model).  Encoder is a
+bidirectional transformer; decoder adds causal self-attention with a KV
+cache plus cross-attention whose KV is computed once at prefill.
+Sinusoidal positions (documented simplification of whisper's learned
+positions — identical compute shape).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import ParamDef, stack_tree
+from repro.parallel.sharding import shard
+
+
+def sinusoid(s: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(s)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def cross_attention(x, ctx_k, ctx_v, p, cfg):
+    """x: (B, Sq, d) attends to precomputed encoder K/V."""
+    b, sq, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, sq, h, dh)
+    o = L.flash_attention_jnp(q, ctx_k, ctx_v, causal=False)
+    o = o.reshape(b, sq, -1) @ p["wo"]
+    return shard(o, "batch", "seq_sp", "embed")
+
+
+def cross_kv(ctx, p, cfg):
+    b, s, _ = ctx.shape
+    kvh, dh = cfg.n_kv_heads, cfg.head_dim
+    k = (ctx @ p["wk"]).reshape(b, s, kvh, dh)
+    v = (ctx @ p["wv"]).reshape(b, s, kvh, dh)
+    return k, v
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.vp = L.pad_vocab(cfg.vocab_size)
+
+    def _enc_block_defs(self):
+        cfg = self.cfg
+        return {"ln1": L.rmsnorm_def(cfg.d_model, cfg.dtype),
+                "attn": L.gqa_defs(cfg),
+                "ln2": L.rmsnorm_def(cfg.d_model, cfg.dtype),
+                "ffn": L.ffn_defs(cfg)}
+
+    def _dec_block_defs(self):
+        d = self._enc_block_defs()
+        d["ln_x"] = L.rmsnorm_def(self.cfg.d_model, self.cfg.dtype)
+        d["xattn"] = L.gqa_defs(self.cfg, cross=True)
+        return d
+
+    def param_defs(self):
+        cfg = self.cfg
+        return {
+            "embed": ParamDef((self.vp, cfg.d_model), ("vocab", "fsdp"),
+                              "embed", cfg.dtype),
+            "lm_head": ParamDef((cfg.d_model, self.vp), ("fsdp", "vocab"),
+                                "normal", cfg.dtype),
+            "enc_blocks": stack_tree(self._enc_block_defs(),
+                                     cfg.encdec.enc_layers),
+            "enc_norm": L.rmsnorm_def(cfg.d_model, cfg.dtype),
+            "dec_blocks": stack_tree(self._dec_block_defs(), cfg.n_layers),
+            "final_norm": L.rmsnorm_def(cfg.d_model, cfg.dtype),
+        }
+
+    def _maybe_remat(self, fn):
+        if self.cfg.remat:
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable)
+        return fn
+
+    # ------------------------------------------------------------------
+    def encode(self, params, frames):
+        """frames: (B, enc_len, d_model) stubbed frontend output."""
+        cfg = self.cfg
+        x = frames.astype(jnp.dtype(cfg.dtype))
+        x = x + sinusoid(x.shape[1], cfg.d_model, x.dtype)[None]
+        x = shard(x, "batch", "seq_sp", "embed")
+
+        def body(carry, bp):
+            xx = carry
+            h = L.rmsnorm(xx, bp["ln1"], cfg.norm_eps)
+            xx = xx + L.gqa_attention(h, bp["attn"], cfg, causal=False,
+                                      use_rope=False)
+            h = L.rmsnorm(xx, bp["ln2"], cfg.norm_eps)
+            xx = xx + L.ffn(h, bp["ffn"])
+            return xx, None
+
+        body = self._maybe_remat(body)
+        if cfg.unroll_scans or not cfg.scan_layers:
+            n = jax.tree.leaves(params["enc_blocks"])[0].shape[0]
+            for i in range(n):
+                x, _ = body(x, jax.tree.map(lambda a: a[i],
+                                            params["enc_blocks"]))
+        else:
+            x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return L.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+    def _dec_stack(self, params, x, mode, cache, pos, xkv):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            bp, c, (xk, xv) = xs
+            xx = carry
+            h = L.rmsnorm(xx, bp["ln1"], cfg.norm_eps)
+            if mode == "train":
+                o = L.gqa_attention(h, bp["attn"], cfg)
+                nc = c
+            elif mode == "prefill":
+                o, (k, v) = L.gqa_prefill(h, bp["attn"], cfg)
+                s_max = c["k"].shape[1]
+                nc = dict(c, k=shard(L.pad_seq(k, s_max),
+                                     "batch", "kv_seq", None, None),
+                          v=shard(L.pad_seq(v, s_max),
+                                  "batch", "kv_seq", None, None))
+            else:
+                o, kvc = L.gqa_decode(h, bp["attn"], cfg,
+                                      {"k": c["k"], "v": c["v"]}, pos)
+                nc = dict(c, **kvc)
+            xx = xx + o
+            h = L.rmsnorm(xx, bp["ln_x"], cfg.norm_eps)
+            xx = xx + cross_attention(h, xk, xv, bp["xattn"], cfg)
+            h = L.rmsnorm(xx, bp["ln2"], cfg.norm_eps)
+            xx = xx + L.ffn(h, bp["ffn"])
+            return xx, nc
+
+        body = self._maybe_remat(body) if mode == "train" else body
+        if cfg.unroll_scans or not cfg.scan_layers:
+            n = jax.tree.leaves(params["dec_blocks"])[0].shape[0]
+            ncs = []
+            for i in range(n):
+                sl = lambda a: a[i]
+                x, nc_i = body(x, (jax.tree.map(sl, params["dec_blocks"]),
+                                   jax.tree.map(sl, cache),
+                                   jax.tree.map(sl, xkv)))
+                ncs.append(nc_i)
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+            return x, new_cache
+        x, new_cache = jax.lax.scan(body, x,
+                                    (params["dec_blocks"], cache, xkv))
+        return x, new_cache
+
+    def _cross_kv_all(self, params, enc_out):
+        cfg = self.cfg
+
+        def body(_, bp):
+            return None, cross_kv(enc_out, bp["xattn"], cfg)
+
+        if cfg.unroll_scans or not cfg.scan_layers:
+            n = jax.tree.leaves(params["dec_blocks"])[0].shape[0]
+            outs = [body(None, jax.tree.map(lambda a: a[i],
+                                            params["dec_blocks"]))[1]
+                    for i in range(n)]
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        _, xkv = jax.lax.scan(body, None, params["dec_blocks"])
+        return xkv            # (k, v) each (L, B, enc_len, KVH, dh)
+
+    def _embed_dec(self, params, tokens, pos0=0):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        pe = sinusoid(pos0 + tokens.shape[1], cfg.d_model, x.dtype)
+        x = x + pe[pos0:][None]
+        return shard(x, "batch", "seq_sp", "embed")
+
+    # ------------------------------------------------------------------
+    def train_loss(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        xkv = self._cross_kv_all(params, enc_out)
+        x = self._embed_dec(params, batch["tokens"])
+        dummy = jnp.zeros((cfg.n_layers,), jnp.float32)
+        x, _ = self._dec_stack(params, x, "train", dummy, None, xkv)
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = (x @ params["lm_head"]).astype(jnp.float32)
+        logits = shard(logits, "batch", "seq_sp", "vocab")
+        loss = _ce(logits, batch["labels"], cfg.vocab_size, self.vp,
+                   batch.get("loss_mask"))
+        return loss, {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+    def cache_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        kvh, dh = cfg.n_kv_heads, cfg.head_dim
+        L_ = cfg.n_layers
+        e = cfg.encdec.enc_len
+        kv = lambda s: jax.ShapeDtypeStruct((L_, batch, s, kvh, dh), dt)
+        return {
+            "self_k": kv(max_len), "self_v": kv(max_len),
+            "cross_k": kv(e), "cross_v": kv(e),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def init_cache(self, batch: int, max_len: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_specs(batch, max_len))
+
+    def cache_pspecs(self, rules):
+        from repro.parallel.sharding import logical_pspec
+        kvs = logical_pspec((None, "batch", "kv_seq", "kv_heads", None), rules)
+        kvx = logical_pspec((None, "batch", None, "kv_heads", None), rules)
+        return {"self_k": kvs, "self_v": kvs, "cross_k": kvx,
+                "cross_v": kvx, "pos": logical_pspec((), rules)}
+
+    def prefill(self, params, inputs, max_len: Optional[int] = None):
+        """inputs: frames (B, enc_len, d) + tokens (B, S_dec prompt)."""
+        cfg = self.cfg
+        enc_out = self.encode(params, inputs["frames"])
+        xkv = self._cross_kv_all(params, enc_out)
+        tokens = inputs["tokens"]
+        b, s = tokens.shape
+        max_len = max_len or s
+        cache = self.init_cache(b, max_len)
+        x = self._embed_dec(params, tokens)
+        per_layer = jax.tree.map(lambda a: a, {"k": cache["self_k"],
+                                               "v": cache["self_v"]})
+        stacked_cache = {"k": cache["self_k"], "v": cache["self_v"]}
+        # scan needs per-layer cache dicts: restructure as xs
+        cache_xs = {"k": stacked_cache["k"], "v": stacked_cache["v"]}
+        x, nc = self._dec_stack(params, x, "prefill", cache_xs, None, xkv)
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = (x[:, -1:] @ params["lm_head"]).astype(jnp.float32)
+        return logits, {"self_k": nc["k"], "self_v": nc["v"],
+                        "cross_k": xkv[0], "cross_v": xkv[1],
+                        "pos": jnp.asarray(s, jnp.int32)}
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x + sinusoid(cache["self_k"].shape[2], cfg.d_model,
+                         x.dtype)[pos][None, None]
+        cache_xs = {"k": cache["self_k"], "v": cache["self_v"]}
+        xkv = (cache["cross_k"], cache["cross_v"])
+        x, nc = self._dec_stack(params, x, "decode", cache_xs, pos, xkv)
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = (x @ params["lm_head"]).astype(jnp.float32)
+        return logits, {"self_k": nc["k"], "self_v": nc["v"],
+                        "cross_k": cache["cross_k"],
+                        "cross_v": cache["cross_v"], "pos": pos + 1}
+
+
+def _ce(logits, labels, vocab, vp, weights=None):
+    from repro.models.lm import _ce_loss
+    return _ce_loss(logits, labels, vocab, vp, weights)

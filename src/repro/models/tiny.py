@@ -1,0 +1,83 @@
+"""MLPerf-Tiny-scale keyword-spotting model (DS-CNN class).
+
+Runs for real on CPU under the tiny-power methodology: single-stream
+inference with pin-toggled measurement windows and energy-per-inference
+(1/J) metric.  MAC/byte counts are analytic for the MCU energy model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.param import ParamDef
+
+# MFCC input: 49 frames x 10 coefficients (speech-commands standard)
+IN_T, IN_F = 49, 10
+
+
+def param_defs(cfg):
+    d, f, classes = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    defs = {"stem": ParamDef((IN_F, d), (None, None), "normal", "float32")}
+    for i in range(cfg.n_layers):
+        defs[f"dw{i}"] = ParamDef((3, d), (None, None), "normal", "float32")
+        defs[f"pw{i}"] = ParamDef((d, d), (None, None), "normal", "float32")
+        defs[f"b{i}"] = ParamDef((d,), (None,), "zeros", "float32")
+    defs["head"] = ParamDef((d, classes), (None, None), "normal", "float32")
+    return defs
+
+
+def forward(params, x, cfg):
+    """x: (B, 49, 10) MFCC -> (B, classes) logits."""
+    h = x @ params["stem"]                                # (B, T, d)
+    for i in range(cfg.n_layers):
+        w = params[f"dw{i}"]
+        hp = jnp.pad(h, ((0, 0), (1, 1), (0, 0)))
+        conv = sum(hp[:, j:j + h.shape[1]] * w[j] for j in range(3))
+        h = jax.nn.relu(conv @ params[f"pw{i}"] + params[f"b{i}"])
+    pooled = h.mean(axis=1)
+    return pooled @ params["head"]
+
+
+def macs(cfg) -> int:
+    d = cfg.d_model
+    m = IN_T * IN_F * d                        # stem
+    m += cfg.n_layers * (IN_T * 3 * d + IN_T * d * d)
+    m += d * cfg.vocab_size
+    return int(m)
+
+
+def sram_bytes(cfg) -> int:
+    """Weights + one activation plane, int8-quantized deployment."""
+    w = IN_F * cfg.d_model + cfg.n_layers * (3 * cfg.d_model
+                                             + cfg.d_model ** 2 + cfg.d_model)
+    w += cfg.d_model * cfg.vocab_size
+    act = 2 * IN_T * cfg.d_model
+    return int(w + act)
+
+
+class TinyModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def param_defs(self):
+        return param_defs(self.cfg)
+
+    def __call__(self, params, x):
+        return forward(params, x, self.cfg)
+
+    def train_loss(self, params, batch):
+        logits = forward(params, batch["mfcc"], self.cfg)
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits, -1)
+        tgt = jnp.take_along_axis(logits, labels[:, None], 1)[:, 0]
+        loss = jnp.mean(lse - tgt)
+        return loss, {"ce": loss}
+
+    @property
+    def macs(self) -> int:
+        return macs(self.cfg)
+
+    @property
+    def sram_bytes(self) -> int:
+        return sram_bytes(self.cfg)

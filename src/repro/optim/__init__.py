@@ -1,0 +1,5 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, OptState, adamw_init, adamw_update, global_norm,
+    clip_by_global_norm,
+)
+from repro.optim.schedule import warmup_cosine  # noqa: F401

@@ -1,0 +1,4 @@
+from repro.parallel.sharding import (  # noqa: F401
+    ShardingRules, make_rules, sharding_ctx, current_rules, shard,
+    logical_pspec, param_pspecs, pspec_for, expert_axes,
+)

@@ -1,0 +1,3 @@
+from repro.train.train_step import (  # noqa: F401
+    TrainState, make_train_step, init_train_state, train_state_pspecs,
+)

@@ -1,0 +1,145 @@
+"""Checkpoint roundtrip, elastic resharding, failure recovery,
+straggler monitoring, optimizer behaviour."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, SimulatedFailure,
+                              StragglerMonitor, run_with_recovery)
+from repro.configs import get_config, reduce_config
+from repro.data import SyntheticTokens
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.train import init_train_state, make_train_step
+from repro.train.train_step import TrainHParams
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_config(get_config("granite-3-2b"))
+    model = build_model(cfg)
+    hp = TrainHParams(total_steps=40, warmup=2)
+    state = init_train_state(model, jax.random.PRNGKey(0), hp)
+    step = jax.jit(make_train_step(model, hp))
+    gen = SyntheticTokens(cfg.vocab_size, 32, 4)
+    return cfg, model, hp, state, step, gen
+
+
+def test_checkpoint_roundtrip(setup):
+    _, _, _, state, _, _ = setup
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(3, state, {"cfg": "granite"})
+        restored, meta = mgr.restore(state)
+        assert meta["step"] == 3 and meta["cfg"] == "granite"
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity_and_gc(setup):
+    _, _, _, state, _, _ = setup
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, state)
+        assert mgr.all_steps() == [3, 4]
+        assert not any(p.endswith(".tmp") for p in os.listdir(d))
+
+
+def test_recovery_resumes_and_finishes(setup):
+    _, _, _, state, step, gen = setup
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        boom = {7: True, 13: True}
+
+        def injector(s):
+            if boom.pop(s, None):
+                raise SimulatedFailure(s)
+
+        final, rep = run_with_recovery(
+            state=state, step_fn=step, data_fn=gen.batch, ckpt=mgr,
+            total_steps=20, ckpt_every=5, failure_injector=injector)
+        assert rep.final_step == 20
+        assert rep.failures == 2
+        assert int(final.step) == 20
+
+
+def test_recovery_gives_up_after_max_restarts(setup):
+    _, _, _, state, step, gen = setup
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+
+        def always_fail(s):
+            if s == 2:
+                raise SimulatedFailure(s)
+
+        with pytest.raises(SimulatedFailure):
+            run_with_recovery(
+                state=state, step_fn=step, data_fn=gen.batch, ckpt=mgr,
+                total_steps=10, ckpt_every=100,
+                failure_injector=always_fail, max_restarts=3)
+
+
+def test_elastic_restore_new_sharding(setup):
+    """Restore onto a different device layout (elastic rescale)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_host_mesh
+
+    _, _, _, state, _, _ = setup
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(1, state, {"mesh": "16x16"})
+        mesh = make_host_mesh()
+        shardings = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), state)
+        restored, _ = mgr.restore(state, shardings=shardings)
+        leaf = jax.tree.leaves(restored)[1]
+        assert leaf.sharding.mesh.shape == dict(mesh.shape)
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(factor=2.0)
+    for i in range(10):
+        assert not mon.observe(i, 1.0)
+    assert mon.observe(10, 5.0)
+    assert len(mon.events) == 1
+    assert mon.events[0]["step"] == 10
+
+
+def test_quantized_moments_close_to_fp32():
+    """int8 optimizer states track fp32 AdamW closely for a few steps."""
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (64, 64))}
+    cfg32 = AdamWConfig()
+    cfg8 = AdamWConfig(quant_moments=True)
+    s32, s8 = adamw_init(params, cfg32), adamw_init(params, cfg8)
+    p32 = p8 = params
+    for i in range(5):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i),
+                                    (64, 64)) * 0.1}
+        p32, s32, _ = adamw_update(p32, g, s32, 1e-2, cfg32)
+        p8, s8, _ = adamw_update(p8, g, s8, 1e-2, cfg8)
+    diff = float(jnp.max(jnp.abs(p32["w"] - p8["w"])))
+    assert diff < 5e-3, diff
+
+
+def test_grad_accumulation_equivalence():
+    """microbatches=2 == full batch (up to numerics)."""
+    cfg = reduce_config(get_config("qwen3-1.7b"))
+    model = build_model(cfg)
+    hp1 = TrainHParams(total_steps=4, warmup=1, microbatches=1)
+    hp2 = TrainHParams(total_steps=4, warmup=1, microbatches=2)
+    state = init_train_state(model, jax.random.PRNGKey(0), hp1)
+    batch = SyntheticTokens(cfg.vocab_size, 32, 4).batch(0)
+    s1, m1 = jax.jit(make_train_step(model, hp1))(state, batch)
+    s2, m2 = jax.jit(make_train_step(model, hp2))(state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-3)
+    a = jax.tree.leaves(s1.params)[0]
+    b = jax.tree.leaves(s2.params)[0]
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=2e-2)

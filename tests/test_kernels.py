@@ -1,0 +1,160 @@
+"""Per-kernel allclose vs the pure-jnp oracle, sweeping shapes/dtypes.
+All kernels run in interpret mode (CPU container; TPU is the target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_ref)
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_attention_ref)
+from repro.kernels.int8_matmul import (int8_matmul, int8_matmul_ref,
+                                       quantize_int8)
+from repro.kernels.linear_scan import linear_scan, linear_scan_ref
+
+TOLS = {jnp.float32: dict(rtol=1e-4, atol=1e-4),
+        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _fold_gqa(q, k, v):
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qr = q.transpose(0, 2, 1, 3).reshape(b * kvh, g, sq, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kvh, k.shape[1], d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kvh, v.shape[1], d)
+    return qr, kr, vr
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,sq,skv,h,kvh,d", [
+    (2, 256, 256, 8, 2, 128),     # GQA, square
+    (1, 384, 256, 4, 4, 64),      # MHA, rectangular, pad sq
+    (1, 128, 512, 4, 1, 128),     # MQA, long KV
+])
+def test_flash_attention_allclose(b, sq, skv, h, kvh, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(b * sq + skv), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, skv, kvh, d), dtype)
+    v = jax.random.normal(ks[2], (b, skv, kvh, d), dtype)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    qr, kr, vr = _fold_gqa(q, k, v)
+    ref = flash_attention_ref(qr, kr, vr, causal=True)
+    g = h // kvh
+    ref = ref.reshape(b, kvh, g, sq, d).reshape(b, h, sq, d)
+    ref = ref.transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOLS[dtype])
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 4, 64))
+    v = jax.random.normal(ks[2], (1, 256, 4, 64))
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    qr, kr, vr = _fold_gqa(q, k, v)
+    ref = flash_attention_ref(qr, kr, vr, causal=False)
+    ref = ref.reshape(1, 4, 1, 256, 64).reshape(1, 4, 256, 64)
+    np.testing.assert_allclose(out, ref.transpose(0, 2, 1, 3),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kvh,d,s,pos", [
+    (2, 8, 2, 128, 2048, 777),
+    (1, 4, 4, 64, 1024, 1023),    # full cache
+    (3, 4, 1, 128, 640, 0),       # single valid position, padded s
+])
+def test_decode_attention_allclose(b, h, kvh, d, s, pos, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(pos + s), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d), dtype)
+    kc = jax.random.normal(ks[1], (b, s, kvh, d), dtype)
+    vc = jax.random.normal(ks[2], (b, s, kvh, d), dtype)
+    out = decode_attention(q, kc, vc, jnp.asarray(pos, jnp.int32),
+                           interpret=True)
+    g = h // kvh
+    qr = q[:, 0].reshape(b * kvh, g, d)
+    kr = kc.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+    vr = vc.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+    ref = decode_attention_ref(qr, kr, vr, pos)
+    ref = ref.reshape(b, kvh, g, d).reshape(b, 1, h, d)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOLS[dtype])
+
+
+@pytest.mark.parametrize("m,k,n", [(256, 256, 256), (300, 500, 260),
+                                   (128, 1024, 512)])
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_matmul_allclose(m, k, n, out_dtype):
+    ks = jax.random.split(jax.random.PRNGKey(m + n), 2)
+    x = jax.random.normal(ks[0], (m, k))
+    w = jax.random.normal(ks[1], (k, n))
+    xq, sx = quantize_int8(x, axis=1)
+    wq, sw = quantize_int8(w, axis=0)
+    out = int8_matmul(xq, wq, sx, sw, out_dtype=out_dtype, interpret=True)
+    ref = int8_matmul_ref(xq, wq, sx, sw, out_dtype=out_dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2 if out_dtype == jnp.bfloat16
+                               else 1e-6, atol=1e-2)
+
+
+def test_int8_quantization_accuracy():
+    """Quantized GEMM approximates the fp32 GEMM (Fig. 8 premise)."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = jax.random.normal(ks[0], (256, 512))
+    w = jax.random.normal(ks[1], (512, 256))
+    xq, sx = quantize_int8(x, axis=1)
+    wq, sw = quantize_int8(w, axis=0)
+    out = int8_matmul(xq, wq, sx, sw, out_dtype=jnp.float32, interpret=True)
+    rel = float(jnp.linalg.norm(out - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 0.02, rel
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,t,h,dh,chunk", [
+    (2, 256, 3, 64, 64),
+    (1, 128, 2, 128, 32),
+    (1, 512, 1, 64, 128),
+])
+def test_linear_scan_allclose(b, t, h, dh, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(t + dh), 5)
+    r = (jax.random.normal(ks[0], (b, t, h, dh)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, t, h, dh)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (b, t, h, dh)) * 0.5).astype(dtype)
+    logw = -jnp.exp(jax.random.normal(ks[3], (b, t, h, dh)) * 0.5)
+    u = jax.random.normal(ks[4], (h, dh)) * 0.3
+    y, S = linear_scan(r, k, v, logw.astype(jnp.float32), u, chunk=chunk,
+                       interpret=True)
+
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+
+    yr, Sr = linear_scan_ref(fold(r), fold(k), fold(v), fold(logw),
+                             jnp.broadcast_to(u[None], (b, h, dh))
+                             .reshape(b * h, 1, dh))
+    yr = yr.reshape(b, h, t, dh).transpose(0, 2, 1, 3)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **tol)
+    np.testing.assert_allclose(S, Sr.reshape(b, h, dh, dh), rtol=5e-4,
+                               atol=5e-4)
+
+
+def test_linear_scan_matches_model_wkv():
+    """Kernel agrees with the model's chunked jnp implementation."""
+    from repro.models.rwkv6 import wkv_chunked
+
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    b, t, h, dh = 1, 128, 2, 64
+    r = jax.random.normal(ks[0], (b, t, h, dh)) * 0.5
+    k = jax.random.normal(ks[1], (b, t, h, dh)) * 0.5
+    v = jax.random.normal(ks[2], (b, t, h, dh)) * 0.5
+    logw = -jnp.exp(jax.random.normal(ks[3], (b, t, h, dh)) * 0.5)
+    u = jax.random.normal(ks[4], (h, dh)) * 0.3
+    y_kernel, _ = linear_scan(r, k, v, logw, u, chunk=32, interpret=True)
+    y_model = wkv_chunked(r, k, v, logw, u, chunk=64)
+    np.testing.assert_allclose(y_kernel, y_model, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,216 @@
+"""MLPerf Power methodology tests: instruments, logs, summarizer,
+compliance, director protocol, loadgen scenarios."""
+import numpy as np
+import pytest
+
+from repro.core import (AnalyzerSpec, Clock, Director, IOManager, LogEvent,
+                        MLPerfLogger, NodeTelemetry, QuerySampleLibrary,
+                        StepWork, SwitchEstimator, SystemDescription,
+                        SystemPowerModel, TinyPowerModel, VirtualAnalyzer,
+                        find_window, review, roofline, run_offline,
+                        run_server, run_single_stream, summarize)
+from repro.core.summarizer import energy_to_train
+from repro.hw import DATACENTER_V5E, TPU_V5E
+
+
+def _perf_log(duration_s=65.0, samples=1000):
+    log = MLPerfLogger("perf")
+    log.run_start(0.0)
+    log.result("samples_processed", samples, duration_s * 1e3)
+    log.run_stop(duration_s * 1e3)
+    return log
+
+
+class TestPowerModel:
+    def test_roofline_terms(self):
+        w = StepWork(flops=1.97e14, hbm_bytes=8.19e11, ici_bytes=5e10)
+        rt = roofline(w, TPU_V5E)
+        assert abs(rt.compute_s - 1.0) < 1e-6
+        assert abs(rt.memory_s - 1.0) < 1e-6
+        assert abs(rt.collective_s - 1.0) < 1e-6
+
+    def test_power_between_idle_and_peak(self):
+        m = SystemPowerModel(DATACENTER_V5E, 256)
+        idle = m.system_watts(None)
+        busy = m.system_watts(StepWork(flops=1e15, hbm_bytes=1e12,
+                                       ici_bytes=1e11))
+        assert idle < busy
+        # chips alone can't exceed peak_watts each by much
+        assert busy < 256 * 400
+
+    def test_energy_scales_with_chips(self):
+        w = StepWork(flops=1e15, hbm_bytes=1e12)
+        small = SystemPowerModel(DATACENTER_V5E, 32).system_watts(w)
+        big = SystemPowerModel(DATACENTER_V5E, 256).system_watts(w)
+        assert big > small * 6      # superlinear-ish: switches add in
+
+    def test_tiny_duty_cycle(self):
+        tm = TinyPowerModel()
+        macs = 200_000
+        e = tm.inference_energy(macs, 60_000)
+        assert 1e-7 < e < 1e-3      # sub-mJ regime
+        assert tm.duty_cycle(macs, period_s=0.25) < 0.05
+
+
+class TestInstruments:
+    def test_analyzer_accuracy(self):
+        an = VirtualAnalyzer(AnalyzerSpec(sample_hz=100.0), seed=1)
+        an.range_probe(lambda t: np.full_like(t, 140.0), 1.0)
+        t, w = an.measure(lambda t: np.full_like(t, 140.0), 10.0)
+        assert abs(np.mean(w) - 140.0) / 140.0 < 0.01
+
+    def test_range_mode_improves_accuracy(self):
+        src = lambda t: np.full_like(t, 40.0)
+        auto = VirtualAnalyzer(seed=2)
+        _, w_auto = auto.measure(src, 60.0)
+        fixed = VirtualAnalyzer(seed=2)
+        fixed.range_probe(src, 2.0)
+        _, w_fix = fixed.measure(src, 60.0)
+        assert np.std(w_fix) <= np.std(w_auto)
+        assert any("crest" in x for x in fixed.warnings)
+
+    def test_io_manager_windows(self):
+        tm = TinyPowerModel()
+        t, amps, pin = tm.waveform(500_000, 80_000, n_inferences=7,
+                                   period_s=0.2)
+        io = IOManager()
+        e, n = io.energy_per_inference(t, amps, pin)
+        assert n == 7
+        model_e = tm.inference_energy(500_000, 80_000)
+        assert abs(e - model_e) / model_e < 0.1
+
+    def test_pdu_vs_node_telemetry(self):
+        tel = NodeTelemetry(seed=0)
+        srcs = {f"n{i}": (lambda t: np.full_like(t, 1000.0))
+                for i in range(4)}
+        per_node = tel.measure_nodes(srcs, 30.0)
+        pdu = tel.measure_nodes(srcs, 30.0, pdu_level=True)
+        total_nodes = sum(np.mean(per_node[f"n{i}"]) for i in range(4))
+        assert abs(total_nodes - np.mean(pdu["pdu"])) / total_nodes < 0.05
+
+
+class TestLoggingAndSummarizer:
+    def test_log_roundtrip(self):
+        log = _perf_log()
+        text = log.dump()
+        events = MLPerfLogger.parse(text)
+        assert len(events) == len(log.events)
+        assert find_window(events) == (0.0, 65_000.0)
+
+    def test_energy_integration_constant_power(self):
+        perf = _perf_log(duration_s=100.0, samples=500)
+        power = MLPerfLogger("power")
+        for i in range(101):
+            power.power_sample(i * 1000.0, 250.0)
+        s = summarize(perf.events, power.events)
+        assert abs(s.energy_j - 250.0 * 100.0) < 1.0
+        assert abs(s.samples_per_joule - 500 / 25_000.0) < 1e-6
+
+    def test_window_alignment_excludes_outside(self):
+        perf = MLPerfLogger("perf")
+        perf.run_start(10_000.0)
+        perf.result("samples_processed", 100, 70_000.0)
+        perf.run_stop(70_000.0)
+        power = MLPerfLogger("power")
+        for i in range(201):           # includes pre/post-window samples
+            watts = 100.0 if 10_000 <= i * 500 <= 70_000 else 10_000.0
+            power.power_sample(i * 500.0, watts)
+        s = summarize(perf.events, power.events)
+        assert abs(s.avg_watts - 100.0) < 5.0
+
+    def test_energy_to_train_multi_node(self):
+        perf = _perf_log(duration_s=60.0)
+        node_logs = {}
+        for n in range(3):
+            lg = MLPerfLogger("power")
+            for i in range(61):
+                lg.power_sample(i * 1000.0, 500.0)
+            node_logs[f"node{n}"] = lg.events
+        est = SwitchEstimator().estimate(192, 60.0)
+        s = energy_to_train(perf.events, node_logs, switch_estimate=est)
+        expect = 3 * 500.0 * 60.0 + est["watts"] * 60.0
+        assert abs(s.energy_j - expect) / expect < 0.01
+        assert s.notes
+
+
+class TestCompliance:
+    def _ok_submission(self, duration=65.0, hz=1.0):
+        perf = _perf_log(duration)
+        power = MLPerfLogger("power")
+        n = int(duration * hz) + 1
+        for i in range(n):
+            power.power_sample(i / hz * 1e3, 800.0)
+        return perf, power
+
+    def test_accepts_valid(self):
+        perf, power = self._ok_submission()
+        rep = review(perf.events, power.events, SystemDescription(
+            scale="datacenter", telemetry_accuracy=0.02,
+            scope=("chips", "host", "interconnect"),
+            max_system_watts=2000, idle_system_watts=600))
+        assert rep.passed, rep.render()
+
+    def test_rejects_short_run(self):
+        perf, power = self._ok_submission(duration=30.0)
+        rep = review(perf.events, power.events, SystemDescription(
+            scale="datacenter", telemetry_accuracy=0.02))
+        assert not rep.passed
+        assert any(c.rule.startswith("R1") for c in rep.failures())
+
+    def test_rejects_sparse_sampling(self):
+        perf = _perf_log(100.0)
+        power = MLPerfLogger("power")
+        for i in range(6):
+            power.power_sample(i * 20_000.0, 800.0)   # 0.05 Hz
+        rep = review(perf.events, power.events, SystemDescription(
+            scale="datacenter", telemetry_accuracy=0.02))
+        assert not rep.passed
+
+    def test_rejects_undocumented_telemetry(self):
+        perf, power = self._ok_submission()
+        rep = review(perf.events, power.events, SystemDescription(
+            scale="datacenter", telemetry_accuracy=None))
+        assert any(c.rule.startswith("R4") for c in rep.failures())
+
+
+class TestLoadgen:
+    def test_single_stream_min_duration(self):
+        qsl = QuerySampleLibrary(8, lambda i: {"idx": i})
+        res = run_single_stream(lambda s: 0.5, qsl, clock=Clock())
+        assert res.min_duration_met
+        assert res.duration_s >= 60.0
+        assert res.n_queries >= 120
+
+    def test_offline_throughput(self):
+        qsl = QuerySampleLibrary(16, lambda i: {"idx": i})
+        res = run_offline(lambda batch: 2.0, qsl, batch=32, clock=Clock())
+        assert abs(res.qps - 16.0) < 0.5
+
+    def test_server_slo(self):
+        qsl = QuerySampleLibrary(16, lambda i: {"idx": i})
+        res, ok = run_server(lambda s: 0.01, qsl, target_qps=10.0,
+                             latency_slo_s=1.0, clock=Clock())
+        assert ok
+        res2, ok2 = run_server(lambda s: 0.5, qsl, target_qps=10.0,
+                               latency_slo_s=0.6, clock=Clock())
+        assert not ok2          # queue builds at rho > 1
+
+
+class TestDirector:
+    def test_full_protocol_energy(self):
+        d = Director(seed=3)
+        model = SystemPowerModel(DATACENTER_V5E, 1)
+        w = StepWork(flops=1e13, hbm_bytes=1e11)
+        watts = model.system_watts(w)
+
+        def sut_run(log):
+            log.run_start(0.0)
+            log.result("samples_processed", 640, 64_000.0)
+            log.run_stop(64_000.0)
+            return 64.0
+
+        perf, power = d.run_measurement(
+            sut_run=sut_run, power_source=lambda t: np.full_like(t, watts))
+        s = summarize(perf.events, power.events)
+        assert abs(s.energy_j - watts * 64.0) / (watts * 64.0) < 0.05
+        assert d.clock_offset_ms != 0.0

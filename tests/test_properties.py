@@ -1,0 +1,140 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (MLPerfLogger, StepWork, SystemPowerModel, roofline,
+                        summarize)
+from repro.core.loadgen import loops_for_min_duration
+from repro.hw import DATACENTER_V5E, TPU_V5E
+from repro.launch.roofline import collective_bytes
+
+FL = st.floats(min_value=1e9, max_value=1e18, allow_nan=False)
+
+
+@given(flops=FL, hbm=FL, ici=st.floats(min_value=0, max_value=1e15))
+@settings(max_examples=200, deadline=None)
+def test_roofline_positive_and_bottleneck_is_max(flops, hbm, ici):
+    rt = roofline(StepWork(flops, hbm, ici), TPU_V5E)
+    terms = {"compute": rt.compute_s, "memory": rt.memory_s,
+             "collective": rt.collective_s}
+    assert all(v >= 0 for v in terms.values())
+    assert terms[rt.bottleneck] == max(terms.values())
+    assert rt.step_s >= max(terms.values())
+
+
+@given(flops=FL, hbm=FL)
+@settings(max_examples=100, deadline=None)
+def test_power_monotone_in_work_rate(flops, hbm):
+    """More work per second -> more average power."""
+    m = SystemPowerModel(DATACENTER_V5E, 8)
+    w1 = StepWork(flops, hbm)
+    w2 = StepWork(flops * 2, hbm * 2)   # same time, double energy
+    assert m.system_watts(w2) >= m.system_watts(w1) - 1e-9
+
+
+@given(watts=st.floats(min_value=1.0, max_value=1e6),
+       duration=st.floats(min_value=61.0, max_value=3600.0),
+       rate_hz=st.sampled_from([0.5, 1.0, 2.0, 10.0]))
+@settings(max_examples=60, deadline=None)
+def test_energy_integration_exact_for_constant_power(watts, duration,
+                                                     rate_hz):
+    perf = MLPerfLogger("perf")
+    perf.run_start(0.0)
+    perf.result("samples_processed", 10, duration * 1e3)
+    perf.run_stop(duration * 1e3)
+    power = MLPerfLogger("power")
+    n = int(duration * rate_hz) + 1
+    for i in range(n):
+        power.power_sample(i / rate_hz * 1e3, watts)
+    s = summarize(perf.events, power.events)
+    covered = (n - 1) / rate_hz          # trapezoid covers sample span
+    assert abs(s.energy_j - watts * min(duration, covered)) \
+        / (watts * duration) < 0.05
+
+
+@given(st.lists(st.tuples(st.floats(0, 1e5), st.floats(1, 1e4)),
+                min_size=2, max_size=50))
+@settings(max_examples=60, deadline=None)
+def test_summarizer_energy_nonnegative_and_additive(samples):
+    """Energy over nodes == sum of per-node energies."""
+    samples = sorted(set(samples))
+    if len(samples) < 2:
+        return
+    perf = MLPerfLogger("perf")
+    t0, t1 = samples[0][0], samples[-1][0]
+    if t1 <= t0:
+        return
+    perf.run_start(t0)
+    perf.run_stop(t1)
+    p1 = MLPerfLogger("power")
+    p2 = MLPerfLogger("power")
+    for t, w in samples:
+        p1.power_sample(t, w, node="a")
+        p2.power_sample(t, w, node="b")
+    both = MLPerfLogger("power")
+    both.events = p1.events + p2.events
+    s_both = summarize(perf.events, both.events)
+    s_one = summarize(perf.events, p1.events)
+    assert s_both.energy_j >= 0
+    assert abs(s_both.energy_j - 2 * s_one.energy_j) <= \
+        1e-6 * max(1.0, s_both.energy_j)
+
+
+@given(st.floats(min_value=1e-6, max_value=600.0))
+@settings(max_examples=100, deadline=None)
+def test_min_duration_looping(workload_s):
+    n = loops_for_min_duration(workload_s)
+    assert n * workload_s >= 60.0 - 1e-6
+    assert (n - 1) * workload_s < 60.0 or n == 1
+
+
+@given(size=st.integers(min_value=1, max_value=4096),
+       g=st.sampled_from([2, 4, 8, 16]),
+       kind=st.sampled_from(["all-reduce", "all-gather", "reduce-scatter",
+                             "all-to-all", "collective-permute"]))
+@settings(max_examples=100, deadline=None)
+def test_collective_parser_single_line(size, g, kind):
+    line = (f"  %x.1 = f32[{size},128]{{1,0}} {kind}(%y.2), "
+            f"replica_groups=[{16 // g},{g}]<=[16], to_apply=%add")
+    out = collective_bytes(line, n_devices=16)
+    counts = out.pop("_counts")
+    assert counts == {kind: 1}
+    b = size * 128 * 4
+    expect = {"all-reduce": 2 * b * (g - 1) / g,
+              "all-gather": b * (g - 1) / g,
+              "reduce-scatter": b * (g - 1),
+              "all-to-all": b * (g - 1) / g,
+              "collective-permute": float(b)}[kind]
+    assert abs(out[kind] - expect) < 1e-6
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_data_pipeline_deterministic(step):
+    from repro.data import SyntheticTokens
+
+    gen = SyntheticTokens(vocab_size=1000, seq_len=32, global_batch=4,
+                          seed=7)
+    a = gen.batch(step)
+    b = gen.batch(step)
+    assert (np.asarray(a["tokens"]) == np.asarray(b["tokens"])).all()
+    # next-token alignment invariant
+    assert (np.asarray(a["labels"])[:, :-1]
+            == np.asarray(a["tokens"])[:, 1:]).all()
+
+
+@given(st.sampled_from([1, 2, 4, 8]), st.integers(min_value=0, max_value=7))
+@settings(max_examples=40, deadline=None)
+def test_host_sharded_pipeline_partitions(n_hosts, step):
+    """Each host generates exactly its disjoint, deterministic shard."""
+    from repro.data import SyntheticTokens
+
+    shards = [SyntheticTokens(100, 16, 8, seed=3, host_id=h,
+                              n_hosts=n_hosts).batch(step)
+              for h in range(n_hosts)]
+    for s in shards:
+        assert s["tokens"].shape[0] == 8 // n_hosts
+    if n_hosts > 1:
+        a = np.asarray(shards[0]["tokens"])
+        b = np.asarray(shards[1]["tokens"])
+        assert not (a == b).all()      # host shards differ
