@@ -1,17 +1,30 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows aggregated from every benchmark module.
+#
+#   python -m benchmarks.run            full sweep
+#   python -m benchmarks.run --smoke    reduced sizes (CI tier-1 gate)
+#
+# Modules whose ``csv`` accepts a ``smoke`` keyword scale themselves
+# down under --smoke; the analytic ones run at full size either way.
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for the CI gate")
+    args = ap.parse_args(argv)
+
     from benchmarks import (accuracy_cost, efficiency_trends,
                             energy_per_inference, power_range,
                             quantization_efficiency, roofline_table,
-                            scaling_energy, sw_hw_optimizations,
-                            tiny_edge_measured)
+                            scaling_energy, serving_throughput,
+                            sw_hw_optimizations, tiny_edge_measured)
 
     modules = [
         ("fig2_power_range", power_range),
@@ -23,12 +36,17 @@ def main() -> None:
         ("fig9_10_sw_hw", sw_hw_optimizations),
         ("roofline_table", roofline_table),
         ("measured_tiny_edge", tiny_edge_measured),
+        ("serving_throughput", serving_throughput),
     ]
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in modules:
         try:
-            for row in mod.csv():
+            kw = {}
+            if args.smoke and \
+                    "smoke" in inspect.signature(mod.csv).parameters:
+                kw["smoke"] = True
+            for row in mod.csv(**kw):
                 print(row)
         except Exception:  # noqa: BLE001 — report all benches
             failures += 1

@@ -1,46 +1,56 @@
-"""Serving under measurement: batched requests through the ServeEngine,
-driven by the loadgen Offline + Server scenarios, measured by the
-Director/analyzer protocol, summarized to Samples/Joule.
+"""Serving under measurement, both engines:
+
+1. Offline scenario — the fixed-batch ``ServeEngine`` issues blocking
+   batches through ``run_offline`` (throughput-bound, the seed path).
+2. Server scenario — Poisson arrivals feed the admission queue of the
+   slot-based ``ContinuousBatchingEngine`` (``run_server_queue``).
+   Finished slots are refilled mid-flight and decoding runs in
+   on-device chunks (one host sync per chunk), so the reported
+   TTFT/TPOT reflect real queueing + continuous batching, not
+   batch-of-stragglers lockstep.  The Director's power samples are then
+   attributed per request (``attribute_request_energy``).
 
   PYTHONPATH=src python examples/serve_power.py
 """
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduce_config
 from repro.core import (Clock, Director, QuerySampleLibrary, StepWork,
                         SystemDescription, SystemPowerModel, review,
-                        run_offline, run_server, summarize)
+                        run_offline, run_server_queue, summarize)
 from repro.hw import EDGE_SYSTEM
 from repro.models import build_model
 from repro.models.param import init_params
-from repro.serving import Request, ServeEngine
+from repro.serving import (ContinuousBatchingEngine, Request, ServeEngine,
+                           attribute_request_energy)
 
 
 def main():
     cfg = reduce_config(get_config("granite-3-2b"))
     model = build_model(cfg)
     params = init_params(model.param_defs(), jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, max_len=96, batch_size=4)
-
-    # real CPU timing of one batch (prefill + 8 decode steps)
     key = jax.random.PRNGKey(1)
 
-    def make_batch(i):
-        return [Request(rid=i * 4 + j,
-                        prompt=jax.random.randint(
-                            jax.random.fold_in(key, i * 4 + j), (16,),
-                            0, cfg.vocab_size),
-                        max_new_tokens=8) for j in range(4)]
+    def make_req(i, arrival_s=0.0, new_tokens=8):
+        return Request(rid=i,
+                       prompt=jax.random.randint(
+                           jax.random.fold_in(key, i), (16,),
+                           0, cfg.vocab_size),
+                       max_new_tokens=new_tokens, arrival_s=arrival_s)
 
-    engine.run_batch(make_batch(0))               # warmup/compile
+    # ------------------------------------------------------------------
+    # Offline: fixed batches, real CPU timing of one batch per issue
+    # ------------------------------------------------------------------
+    engine = ServeEngine(model, params, max_len=96, batch_size=4)
+    engine.run_batch([make_req(100 + j) for j in range(4)])  # compile
 
     def issue_batch(samples):
         t0 = time.perf_counter()
-        engine.run_batch(make_batch(samples[0]["idx"]))
+        engine.run_batch([make_req(4 * samples[0]["idx"] + j)
+                          for j in range(4)])
         return time.perf_counter() - t0
 
     qsl = QuerySampleLibrary(32, lambda i: {"idx": i})
@@ -49,34 +59,66 @@ def main():
     print(f"Offline: {offline.n_queries} queries, "
           f"{offline.qps:.2f} samples/s, p90 {offline.p90 * 1e3:.1f} ms")
 
-    server, slo_ok = run_server(
-        lambda s: issue_batch([s]) / 4, qsl, target_qps=offline.qps * 0.6,
-        latency_slo_s=10.0, clock=Clock())
-    print(f"Server:  {server.qps:.2f} qps, p99 {server.p99 * 1e3:.1f} ms, "
-          f"SLO met: {slo_ok}")
+    # ------------------------------------------------------------------
+    # Server: Poisson arrivals -> continuous-batching admission queue.
+    # Mixed token budgets make the fixed-batch straggler problem real;
+    # the slot engine retires short requests early and refills.
+    # ------------------------------------------------------------------
+    cont = ContinuousBatchingEngine(model, params, max_len=96, n_slots=4,
+                                    chunk_steps=4)
+    cont.serve([make_req(200, new_tokens=4)],
+               honor_arrivals=False)                  # warmup/compile
+    done_box = {}
 
-    # Director-measured energy for the offline run
+    def serve_fn(arrivals):
+        reqs = [make_req(i, arrival_s=a, new_tokens=(4, 12, 8)[i % 3])
+                for i, (_, a) in enumerate(arrivals)]
+        done = cont.serve(reqs)
+        done_box["reqs"] = done
+        return done
+
+    server = run_server_queue(serve_fn, qsl, target_qps=offline.qps * 2,
+                              latency_slo_s=10.0, min_duration_s=0.5)
+    res = server.result
+    print(f"Server:  {res.qps:.2f} qps, {server.tokens_per_s:.1f} tok/s, "
+          f"p99 {res.p99 * 1e3:.1f} ms, SLO met: {server.slo_met}")
+    print(f"  TTFT p99 {server.ttft_p(99) * 1e3:.1f} ms, "
+          f"TPOT mean {np.mean(server.tpot_s) * 1e3:.2f} ms, "
+          f"host syncs {cont.host_syncs}")
+
+    # ------------------------------------------------------------------
+    # Director-measured energy for the Server run, per-request shares
+    # ------------------------------------------------------------------
     meter = SystemPowerModel(EDGE_SYSTEM, 1)
-    work = StepWork(flops=2.0 * cfg.param_count() * 24,
-                    hbm_bytes=2.0 * cfg.param_count())
-    watts = meter.system_watts(work)
+    watts = meter.system_watts(StepWork(
+        flops=2.0 * cfg.param_count() * server.tokens_per_s,
+        hbm_bytes=2.0 * cfg.param_count()))
     d = Director(seed=0)
 
     def sut_run(log):
         log.run_start(0.0)
-        log.result("samples_processed", offline.n_queries,
-                   offline.duration_s * 1e3)
-        log.run_stop(offline.duration_s * 1e3)
-        return offline.duration_s
+        log.result("samples_processed", res.n_queries,
+                   res.duration_s * 1e3)
+        log.run_stop(res.duration_s * 1e3)
+        return res.duration_s
 
     perf_log, power_log = d.run_measurement(
         sut_run=sut_run, power_source=lambda t: np.full_like(t, watts))
     s = summarize(perf_log.events, power_log.events)
+    samples = [(ev.time_ms / 1e3, float(ev.value))
+               for ev in power_log.events if ev.key == "power_w"]
+    per_req = attribute_request_energy(
+        done_box["reqs"], np.asarray([t for t, _ in samples]),
+        np.asarray([w for _, w in samples]))
+    e = np.asarray(list(per_req.values()))
     print(f"energy: {s.energy_j:.1f} J -> "
-          f"{s.samples_per_joule:.4f} samples/J")
+          f"{s.samples_per_joule:.4f} samples/J, "
+          f"{server.total_tokens / max(s.energy_j, 1e-9):.3f} tok/J, "
+          f"per-request mean {e.mean():.2f} J")
     rep = review(perf_log.events, power_log.events,
                  SystemDescription(scale="edge", max_system_watts=60,
-                                   idle_system_watts=8))
+                                   idle_system_watts=8),
+                 min_duration_s=0.5)
     print(rep.render())
 
 

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: the full test suite plus the benchmark smoke sweep.
+# Mirrors ROADMAP.md's "Tier-1 verify" command; run from the repo root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python -m benchmarks.run --smoke

@@ -1,5 +1,19 @@
-"""Dev-loop smoke: one fwd/train-loss per reduced arch on CPU."""
+"""Dev-loop smoke: one fwd/train-loss per reduced arch on CPU.
+
+  python scripts/dev_smoke.py                # all archs
+  python scripts/dev_smoke.py qwen3-1.7b     # one arch
+  python scripts/dev_smoke.py --ci           # scripts/ci_tier1.sh
+                                             # (pytest + bench smoke)
+"""
+import os
+import subprocess
 import sys
+
+# --ci must dispatch before the repro imports: ci_tier1.sh sets its
+# own PYTHONPATH, so the flag has to work from a bare interpreter
+if __name__ == "__main__" and "--ci" in sys.argv[1:]:
+    script = os.path.join(os.path.dirname(__file__), "ci_tier1.sh")
+    raise SystemExit(subprocess.call(["bash", script]))
 
 import jax
 import jax.numpy as jnp

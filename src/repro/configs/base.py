@@ -107,6 +107,8 @@ class ModelConfig:
                                   # sublayers instead of the superblock
                                   # (jamba: ~4x lower temp memory)
     use_pallas: bool = False      # flip on real TPU; CPU uses jnp refs
+    pallas_interpret: bool = False  # run the Pallas kernels in interpret
+                                  # mode (CPU correctness/parity tests)
     quant: Optional[str] = None   # None | "int8" | "fp8" weight/act quant
     seq_shard_kv: bool = True     # sequence-shard KV cache for decode
     subquadratic: bool = False    # eligible for long_500k

@@ -9,8 +9,9 @@ from repro.core.analyzer import (  # noqa: F401
     TelemetrySpec, VirtualAnalyzer,
 )
 from repro.core.loadgen import (  # noqa: F401
-    Clock, LoadgenResult, QuerySampleLibrary, loops_for_min_duration,
-    run_offline, run_server, run_single_stream,
+    Clock, LoadgenResult, QuerySampleLibrary, ServerMetrics,
+    loops_for_min_duration, poisson_arrivals, run_offline, run_server,
+    run_server_queue, run_single_stream,
 )
 from repro.core.director import Director, NTPSync, PTDSession  # noqa: F401
 from repro.core.mlperf_log import (  # noqa: F401

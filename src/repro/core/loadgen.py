@@ -3,6 +3,12 @@
 - ``SingleStream``: one query at a time, latency-bound (tiny/edge).
 - ``Offline``: all samples issued at once, throughput-bound.
 - ``Server``: Poisson arrivals at a target QPS with latency SLO.
+  Two forms: ``run_server`` (synchronous — each query blocks the SUT,
+  queueing modelled analytically) and ``run_server_queue`` (the
+  arrival schedule is handed to a continuous-batching engine's
+  admission queue up front; the engine overlaps requests and reports
+  per-request TTFT/TPOT, from which throughput and SLO compliance are
+  derived).
 
 Implements the paper's minimum-duration rule: workloads shorter than
 ``min_duration_s`` (60 s by default) are looped until the threshold is
@@ -11,6 +17,7 @@ reached (§IV-A, principle four).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Callable, Optional
 
@@ -39,8 +46,23 @@ class LoadgenResult:
     qps: float
     min_duration_met: bool
 
+    @functools.cached_property
+    def _sorted_latencies(self) -> np.ndarray:
+        """Latencies sorted once; every percentile access reuses it."""
+        return np.sort(np.asarray(self.latencies_s, float))
+
     def percentile(self, p: float) -> float:
-        return float(np.percentile(self.latencies_s, p))
+        """Percentile over the cached sorted array (sorted once; the
+        p50/p90/p99 properties all reuse it).
+
+        Empty runs return ``nan`` — with zero samples there is no
+        defensible tie-break between "fastest" and "slowest", so we
+        refuse to invent one rather than raise mid-report.
+        """
+        lat = self._sorted_latencies
+        if lat.size == 0:
+            return float("nan")
+        return float(np.percentile(lat, p))
 
     @property
     def p50(self):
@@ -132,6 +154,72 @@ def run_server(issue: Callable[[dict], float], qsl: QuerySampleLibrary, *,
     res = LoadgenResult("Server", i, dur, np.asarray(lat), qps=i / dur,
                         min_duration_met=dur >= min_duration_s)
     return res, res.p99 <= latency_slo_s
+
+
+def poisson_arrivals(target_qps: float, *,
+                     min_duration_s: float = MIN_DURATION_S,
+                     seed: int = 0, min_queries: int = 32) -> np.ndarray:
+    """Poisson arrival schedule (seconds from run start), extended past
+    ``min_duration_s`` until at least ``min_queries`` queries exist."""
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    while t < min_duration_s or len(out) < min_queries:
+        t += rng.exponential(1.0 / target_qps)
+        out.append(t)
+    return np.asarray(out)
+
+
+@dataclasses.dataclass
+class ServerMetrics:
+    """Queue-driven Server-scenario outcome (continuous batching)."""
+
+    result: LoadgenResult            # end-to-end latency per query
+    slo_met: bool                    # p99 end-to-end <= SLO
+    ttft_s: np.ndarray               # time to first token per query
+    tpot_s: np.ndarray               # per-token decode cadence
+    total_tokens: int
+    tokens_per_s: float
+
+    def ttft_p(self, p: float) -> float:
+        if self.ttft_s.size == 0:
+            return float("nan")
+        return float(np.percentile(self.ttft_s, p))
+
+
+def run_server_queue(serve: Callable[[list[tuple[dict, float]]], list],
+                     qsl: QuerySampleLibrary, *, target_qps: float,
+                     latency_slo_s: float,
+                     min_duration_s: float = MIN_DURATION_S,
+                     seed: int = 0,
+                     min_queries: int = 32) -> ServerMetrics:
+    """Server scenario against an asynchronous admission queue.
+
+    The whole Poisson arrival schedule is generated up front and handed
+    to ``serve(arrivals)`` — ``arrivals`` is a list of ``(sample,
+    arrival_s)`` — which feeds an engine's admission queue and returns
+    completed records carrying ``arrival_s`` / ``first_token_s`` /
+    ``done_s`` / ``output`` on one clock with t=0 at serve start (the
+    ``repro.serving.Request`` contract).  Unlike ``run_server``, the
+    SUT is free to overlap requests (continuous batching), so the
+    latency distribution reflects real queueing + mid-flight admission.
+    """
+    arrivals = poisson_arrivals(target_qps, min_duration_s=min_duration_s,
+                                seed=seed, min_queries=min_queries)
+    recs = serve([(qsl.sample(i), float(a))
+                  for i, a in enumerate(arrivals)])
+    lat = np.asarray([r.done_s - r.arrival_s for r in recs])
+    ttft = np.asarray([r.first_token_s - r.arrival_s for r in recs])
+    tpot = np.asarray([(r.done_s - r.first_token_s)
+                       / max(1, len(r.output) - 1)
+                       for r in recs if len(r.output or []) > 1])
+    dur = max((r.done_s for r in recs), default=0.0)
+    res = LoadgenResult("Server", len(recs), dur, lat,
+                        qps=len(recs) / dur if dur else 0.0,
+                        min_duration_met=dur >= min_duration_s)
+    total_tokens = sum(len(r.output or []) for r in recs)
+    return ServerMetrics(res, res.p99 <= latency_slo_s, ttft, tpot,
+                         total_tokens,
+                         total_tokens / dur if dur else 0.0)
 
 
 def loops_for_min_duration(workload_s: float,

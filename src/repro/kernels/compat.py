@@ -1,0 +1,12 @@
+"""Version-compat shims for ``jax.experimental.pallas.tpu``.
+
+``pltpu.CompilerParams`` was renamed from ``pltpu.TPUCompilerParams``
+across jax releases; resolve whichever this install provides so all
+four kernels compile against both old and new jax.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

@@ -1,11 +1,18 @@
 """Split-KV decode attention — Pallas TPU kernel (flash-decoding on TPU).
 
-One new token attends to a long KV cache.  GPU flash-decoding splits KV
-across SMs and merges by LSE; on TPU we re-tile: the KV axis is the
-innermost ("arbitrary") grid dim streaming cache blocks HBM->VMEM, and
-the G query heads of a KV head form the (tiny) MXU row block.  Running
-(m, l, acc) live in VMEM scratch; a position mask handles the
-partially-filled cache.
+One new token per sequence attends to a long KV cache.  GPU
+flash-decoding splits KV across SMs and merges by LSE; on TPU we
+re-tile: the KV axis is the innermost ("arbitrary") grid dim streaming
+cache blocks HBM->VMEM, and the G query heads of a KV head form the
+(tiny) MXU row block.  Running (m, l, acc) live in VMEM scratch.
+
+The kernel is *ragged*: ``pos`` is a per-row vector (BH,) held in SMEM,
+so slots of a continuous-batching decode batch sitting at different
+sequence depths decode in one fused call.  Each row masks its own
+cache tail and skips (``pl.when``) every KV block entirely past its
+position — a slot at depth 100 does one block of work while its
+neighbour at depth 8000 streams sixteen, with no host round-trip to
+regroup them.  A scalar ``pos`` broadcasts (the fixed-batch path).
 
 VMEM per step (bk=512, d=128): k/v 0.5 MB + acc ~0.06 MB.
 """
@@ -19,11 +26,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = -1e30
 
 
 def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             scale: float, block_k: int, n_k: int):
+    ib = pl.program_id(0)
     ik = pl.program_id(1)
 
     @pl.when(ik == 0)
@@ -32,7 +42,7 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    pos = pos_ref[0]
+    pos = pos_ref[ib]                              # this row's depth
 
     @pl.when(ik * block_k <= pos)
     def _step():
@@ -63,7 +73,8 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 def decode_attention_kernel(q, k, v, pos, *, block_k: int = 512,
                             interpret: bool = False) -> jax.Array:
-    """q: (BH, G, D); k, v: (BH, S, D); pos: () int32 — current index.
+    """q: (BH, G, D); k, v: (BH, S, D); pos: () or (BH,) int32 —
+    per-row current index (a scalar broadcasts to every row).
     Returns (BH, G, D)."""
     bh, g, d = q.shape
     s = k.shape[1]
@@ -72,7 +83,8 @@ def decode_attention_kernel(q, k, v, pos, *, block_k: int = 512,
     scale = 1.0 / math.sqrt(d)
     kernel = functools.partial(_kernel, scale=scale, block_k=block_k,
                                n_k=n_k)
-    pos_arr = jnp.asarray([pos], jnp.int32)
+    pos_arr = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32).reshape(-1), (bh,))
     return pl.pallas_call(
         kernel,
         grid=(bh, n_k),
@@ -89,7 +101,7 @@ def decode_attention_kernel(q, k, v, pos, *, block_k: int = 512,
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(pos_arr, q, k, v)

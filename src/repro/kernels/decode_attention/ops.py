@@ -1,4 +1,8 @@
-"""jit'd wrapper: model-layout decode attention against a KV cache."""
+"""jit'd wrapper: model-layout decode attention against a KV cache.
+
+Accepts a per-sequence ``pos`` vector (ragged continuous-batching
+decode) or a scalar (fixed batch, all rows at the same depth).
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -14,7 +18,7 @@ from repro.kernels.decode_attention.decode_attention import (
 @partial(jax.jit, static_argnames=("block_k", "interpret"))
 def decode_attention(q, k_cache, v_cache, pos, *, block_k: int = 512,
                      interpret: bool = False):
-    """q: (B, 1, H, D); caches: (B, S, KVH, D); pos: scalar int32.
+    """q: (B, 1, H, D); caches: (B, S, KVH, D); pos: () or (B,) int32.
     Returns (B, 1, H, D)."""
     b, _, h, d = q.shape
     s, kvh = k_cache.shape[1], k_cache.shape[2]
@@ -26,6 +30,9 @@ def decode_attention(q, k_cache, v_cache, pos, *, block_k: int = 512,
     if pk:
         kr = jnp.pad(kr, ((0, 0), (0, pk), (0, 0)))
         vr = jnp.pad(vr, ((0, 0), (0, pk), (0, 0)))
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:                      # (B,) -> (B*KVH,): row b*kvh+j
+        pos = jnp.repeat(pos, kvh)
     o = decode_attention_kernel(qr, kr, vr, pos, block_k=block_k,
                                 interpret=interpret)
     return o.reshape(b, kvh, g, d).reshape(b, h, d)[:, None].transpose(

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for split-KV decode attention."""
+"""Pure-jnp oracle for split-KV decode attention (scalar or ragged pos)."""
 from __future__ import annotations
 
 import math
@@ -8,12 +8,18 @@ import jax.numpy as jnp
 
 
 def decode_attention_ref(q, k, v, pos) -> jax.Array:
-    """q: (BH, G, D); k, v: (BH, S, D); attends to positions <= pos."""
+    """q: (BH, G, D); k, v: (BH, S, D); attends to positions <= pos.
+    ``pos`` is a scalar or a per-row (BH,) vector."""
     d = q.shape[-1]
     s = jnp.einsum("bgd,bkd->bgk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) / math.sqrt(d)
-    mask = jnp.arange(k.shape[1]) <= pos
-    s = jnp.where(mask[None, None], s, -1e30)
+    pos = jnp.asarray(pos, jnp.int32)
+    kv_pos = jnp.arange(k.shape[1])
+    if pos.ndim == 1:
+        mask = kv_pos[None, :] <= pos[:, None]          # (BH, S)
+        s = jnp.where(mask[:, None, :], s, -1e30)
+    else:
+        s = jnp.where((kv_pos <= pos)[None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bgk,bkd->bgd", p, v.astype(jnp.float32))
     return o.astype(q.dtype)

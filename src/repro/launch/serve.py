@@ -1,8 +1,20 @@
 """Serving launcher: ``--arch <id>``, loadgen scenario, Director-
 measured Samples/Joule.
 
+Two engines:
+
+- ``--engine fixed``: the synchronous fixed-batch ``ServeEngine`` —
+  every scenario issues blocking batches, one host sync per token.
+- ``--engine continuous``: the slot-based ``ContinuousBatchingEngine``.
+  Under ``--scenario server`` the Poisson arrival schedule feeds the
+  engine's admission queue asynchronously (``run_server_queue``); the
+  Director samples a utilization-shaped power trace over the run and
+  every request is attributed its share of the measured Joules
+  (TTFT/TPOT/energy per request, tokens/s and tokens/J aggregate).
+
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
-      --reduce --scenario offline
+      --reduce --scenario server --engine continuous --qps 8 \
+      --min-duration 2
 """
 from __future__ import annotations
 
@@ -15,12 +27,106 @@ import numpy as np
 from repro.configs import get_config, list_archs, reduce_config
 from repro.core import (Clock, Director, QuerySampleLibrary, StepWork,
                         SystemDescription, SystemPowerModel, review,
-                        run_offline, run_server, run_single_stream,
-                        summarize)
+                        run_offline, run_server, run_server_queue,
+                        run_single_stream, summarize)
 from repro.hw import EDGE_SYSTEM
 from repro.models import build_model
 from repro.models.param import init_params
-from repro.serving import Request, ServeEngine
+from repro.serving import (ContinuousBatchingEngine, Request, ServeEngine,
+                           attribute_request_energy)
+
+
+def _utilization_power(requests, n_slots, meter, cfg, qps):
+    """Power trace shaped by engine occupancy: idle floor + per-slot
+    share of the busy draw, from the completed requests' spans."""
+    spans = [(r.arrival_s, r.done_s) for r in requests
+             if r.done_s is not None]
+    busy = meter.system_watts(StepWork(
+        flops=2.0 * cfg.param_count() * qps,
+        hbm_bytes=2.0 * cfg.param_count() * qps / 8))
+    idle = meter.system_watts(None)
+
+    def source(t):
+        t = np.asarray(t, float)
+        inflight = np.zeros_like(t)
+        for a, d in spans:
+            inflight += (t >= a) & (t < d)
+        util = np.minimum(inflight / max(1, n_slots), 1.0)
+        return idle + (busy - idle) * util
+
+    return source
+
+
+def _serve_continuous(args, cfg, model, params):
+    engine = ContinuousBatchingEngine(
+        model, params, max_len=args.max_len, n_slots=args.slots,
+        chunk_steps=args.chunk_steps)
+    key = jax.random.PRNGKey(1)
+
+    def make_req(i, arrival_s):
+        return Request(
+            rid=i,
+            prompt=jax.random.randint(jax.random.fold_in(key, i),
+                                      (16,), 0, cfg.vocab_size),
+            max_new_tokens=args.new_tokens, arrival_s=arrival_s)
+
+    # warmup/compile: one prefill + one chunk outside the measurement
+    engine.serve([make_req(10 ** 6, 0.0)], honor_arrivals=False)
+
+    done_box = {}
+
+    def serve_fn(arrivals):
+        reqs = [make_req(i, a) for i, (_, a) in enumerate(arrivals)]
+        done = engine.serve(reqs)
+        done_box["reqs"] = done
+        return done
+
+    qsl = QuerySampleLibrary(64, lambda i: {"idx": i})
+    m = run_server_queue(serve_fn, qsl, target_qps=args.qps,
+                         latency_slo_s=10.0,
+                         min_duration_s=args.min_duration)
+    res = m.result
+    print(f"Server[continuous]: {res.n_queries} queries, "
+          f"{res.qps:.2f}/s, {m.tokens_per_s:.1f} tok/s, "
+          f"p99 {res.p99 * 1e3:.1f} ms, SLO met: {m.slo_met}")
+    print(f"  TTFT p50/p99: {m.ttft_p(50) * 1e3:.1f}/"
+          f"{m.ttft_p(99) * 1e3:.1f} ms, "
+          f"TPOT mean: {np.mean(m.tpot_s) * 1e3:.2f} ms, "
+          f"host syncs: {engine.host_syncs} "
+          f"({m.total_tokens} tokens)")
+
+    # Director-measured energy, attributed per request
+    reqs = done_box["reqs"]
+    meter = SystemPowerModel(EDGE_SYSTEM, 1)
+    source = _utilization_power(reqs, args.slots, meter, cfg, res.qps)
+    d = Director(seed=0)
+
+    def sut_run(log):
+        log.run_start(0.0)
+        log.result("samples_processed", res.n_queries,
+                   res.duration_s * 1e3)
+        log.run_stop(res.duration_s * 1e3)
+        return res.duration_s
+
+    perf_log, power_log = d.run_measurement(sut_run=sut_run,
+                                            power_source=source)
+    s = summarize(perf_log.events, power_log.events)
+    samples = [(ev.time_ms, float(ev.value)) for ev in power_log.events
+               if ev.key == "power_w"]
+    times_s = np.asarray([t for t, _ in samples]) / 1e3
+    watts = np.asarray([w for _, w in samples])
+    per_req = attribute_request_energy(reqs, times_s, watts)
+    e = np.asarray(list(per_req.values()))
+    print(f"{s.energy_j:.1f} J -> {s.samples_per_joule:.4f} samples/J, "
+          f"{m.total_tokens / max(s.energy_j, 1e-9):.3f} tok/J")
+    if e.size:
+        print(f"  per-request energy: mean {e.mean():.2f} J, "
+              f"p90 {np.percentile(e, 90):.2f} J")
+    rep = review(perf_log.events, power_log.events,
+                 SystemDescription(scale="edge", max_system_watts=60,
+                                   idle_system_watts=8),
+                 min_duration_s=args.min_duration)
+    print(rep.render())
 
 
 def main(argv=None):
@@ -28,8 +134,14 @@ def main(argv=None):
     ap.add_argument("--arch", required=True, choices=list_archs())
     ap.add_argument("--scenario", default="offline",
                     choices=["offline", "server", "single-stream"])
+    ap.add_argument("--engine", default="fixed",
+                    choices=["fixed", "continuous"])
     ap.add_argument("--reduce", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--chunk-steps", type=int, default=8)
+    ap.add_argument("--qps", type=float, default=4.0)
+    ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--min-duration", type=float, default=60.0)
     args = ap.parse_args(argv)
@@ -39,7 +151,17 @@ def main(argv=None):
         cfg = reduce_config(cfg)
     model = build_model(cfg)
     params = init_params(model.param_defs(), jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, max_len=64, batch_size=args.batch)
+
+    if args.engine == "continuous":
+        if args.scenario != "server":
+            ap.error("--engine continuous currently drives the server "
+                     "scenario (its admission queue is the point); use "
+                     "--scenario server")
+        _serve_continuous(args, cfg, model, params)
+        return
+
+    engine = ServeEngine(model, params, max_len=args.max_len,
+                         batch_size=args.batch)
     key = jax.random.PRNGKey(1)
 
     def make_reqs(i):
@@ -51,7 +173,6 @@ def main(argv=None):
                 for j in range(args.batch)]
 
     engine.run_batch(make_reqs(0))             # compile
-
     def issue_batch(samples):
         t0 = time.perf_counter()
         engine.run_batch(make_reqs(samples[0]["idx"]))
@@ -64,7 +185,7 @@ def main(argv=None):
         slo = None
     elif args.scenario == "server":
         res, slo = run_server(lambda s: issue_batch([s]) / args.batch, qsl,
-                              target_qps=4.0, latency_slo_s=10.0,
+                              target_qps=args.qps, latency_slo_s=10.0,
                               clock=Clock(),
                               min_duration_s=args.min_duration)
     else:

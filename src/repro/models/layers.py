@@ -176,7 +176,8 @@ def flash_attention_jnp(q, k, v, *, causal: bool, q_offset=0,
 def decode_attention_jnp(q, k_cache, v_cache, pos) -> jax.Array:
     """One-token attention against a (possibly seq-sharded) KV cache.
 
-    q: (B, 1, H, D); caches: (B, S, KVH, D); pos: scalar current index.
+    q: (B, 1, H, D); caches: (B, S, KVH, D); pos: scalar current index
+    or a per-slot (B,) vector (ragged continuous-batching decode).
     Softmax reductions over the sharded S axis become psums under SPMD —
     this is flash-decoding's split-KV merge, expressed for GSPMD.
     """
@@ -187,8 +188,13 @@ def decode_attention_jnp(q, k_cache, v_cache, pos) -> jax.Array:
     qg = q.reshape(b, kvh, g, d)
     s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
                    k_cache.astype(jnp.float32)) * scale
-    mask = jnp.arange(skv) <= pos
-    s = jnp.where(mask[None, None, None, :], s, MASK_VALUE)
+    pos = jnp.asarray(pos)
+    kv_pos = jnp.arange(skv)
+    if pos.ndim == 1:
+        mask = kv_pos[None, :] <= pos[:, None]              # (B, S)
+        s = jnp.where(mask[:, None, None, :], s, MASK_VALUE)
+    else:
+        s = jnp.where((kv_pos <= pos)[None, None, None, :], s, MASK_VALUE)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
     return o.reshape(b, 1, h, d).astype(q.dtype)
@@ -198,11 +204,24 @@ def cache_update(cache: jax.Array, new: jax.Array, pos,
                  dus: bool = False) -> jax.Array:
     """Insert ``new`` (B, 1, KVH, D) at index ``pos`` of a seq-sharded cache.
 
+    ``pos`` is a scalar (whole batch at one depth) or a per-slot (B,)
+    vector (continuous batching: every row writes its own depth).
+
     Default: one-hot masked update — elementwise, shards cleanly, but
     costs 2 reads + 1 write of the whole cache.  ``dus``: in-place
     dynamic_update_slice (1 tiny write); SPMD handles the sharded seq
     dim with an owner-select (perf iteration, EXPERIMENTS.md §Perf).
     """
+    pos = jnp.asarray(pos)
+    if pos.ndim == 1:
+        if dus:
+            return jax.vmap(
+                lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
+                    c, n.astype(c.dtype), p, axis=0))(cache, new, pos)
+        oh = (jnp.arange(cache.shape[1])[None, :]
+              == pos[:, None]).astype(cache.dtype)       # (B, S)
+        oh = oh[:, :, None, None]
+        return cache * (1 - oh) + new.astype(cache.dtype) * oh
     if dus:
         return jax.lax.dynamic_update_slice_in_dim(
             cache, new.astype(cache.dtype), pos, axis=1)
@@ -299,17 +318,32 @@ def gqa_prefill(x, p, cfg, positions=None):
 
 
 def gqa_decode(x, p, cfg, cache, pos):
-    """One-token decode; cache = dict(k, v) seq-sharded over the model axis."""
+    """One-token decode; cache = dict(k, v) seq-sharded over the model axis.
+
+    ``pos`` is a scalar or a per-slot (B,) vector; with a vector every
+    batch row ropes, caches and attends at its own sequence depth (the
+    ragged decode of the continuous-batching engine).  On TPU
+    (``cfg.use_pallas``) attention dispatches to the ragged split-KV
+    Pallas kernel; the jnp path below is its CPU-exact analogue.
+    """
     b = x.shape[0]
     q, k, v = _proj_qkv(x, p, cfg)
-    poss = jnp.full((1,), pos)
+    pos = jnp.asarray(pos)
+    poss = pos[:, None] if pos.ndim == 1 else jnp.full((1,), pos)
     q = rope(q, poss, cfg.rope_theta)
     k = rope(k, poss, cfg.rope_theta)
     k_cache = cache_update(cache["k"], k, pos, dus=cfg.cache_dus)
     v_cache = cache_update(cache["v"], v, pos, dus=cfg.cache_dus)
     k_cache = shard(k_cache, "batch", "kv_seq", None, None)
     v_cache = shard(v_cache, "batch", "kv_seq", None, None)
-    o = decode_attention_jnp(q, k_cache, v_cache, pos)
+    if cfg.use_pallas:
+        from repro.kernels.decode_attention.ops import decode_attention
+        s = k_cache.shape[1]
+        bk = min(512, -(-s // 128) * 128)
+        o = decode_attention(q, k_cache, v_cache, pos, block_k=bk,
+                             interpret=cfg.pallas_interpret)
+    else:
+        o = decode_attention_jnp(q, k_cache, v_cache, pos)
     o = o.reshape(b, 1, -1) @ p["wo"]
     return o, {"k": k_cache, "v": v_cache}
 
@@ -376,7 +410,13 @@ def _mla_attend(q_abs, q_rope, c_kv, k_rope, cfg, *, causal, pos=None):
         msk = kv_pos[None, :] <= q_pos[:, None]
         sc = jnp.where(msk[None, None], sc, MASK_VALUE)
     elif pos is not None:
-        sc = jnp.where((kv_pos <= pos)[None, None, None], sc, MASK_VALUE)
+        pos = jnp.asarray(pos)
+        if pos.ndim == 1:                       # per-slot depths (B,)
+            msk = kv_pos[None, :] <= pos[:, None]
+            sc = jnp.where(msk[:, None, None, :], sc, MASK_VALUE)
+        else:
+            sc = jnp.where((kv_pos <= pos)[None, None, None], sc,
+                           MASK_VALUE)
     pr = jax.nn.softmax(sc, axis=-1)
     o_l = jnp.einsum("bhqs,bsr->bqhr", pr, c_kv.astype(jnp.float32))
     return o_l.astype(q_abs.dtype)
@@ -450,13 +490,30 @@ def mla_prefill(x, p, cfg):
 
 
 def mla_decode(x, p, cfg, cache, pos):
-    """MLA decode: latent cache (B, S, R) + rope cache (B, S, P)."""
+    """MLA decode: latent cache (B, S, R) + rope cache (B, S, P).
+
+    ``pos`` is a scalar or a per-slot (B,) vector (ragged decode).
+    """
     b = x.shape[0]
-    positions = jnp.full((1,), pos)
+    pos = jnp.asarray(pos)
+    positions = pos[:, None] if pos.ndim == 1 else jnp.full((1,), pos)
     q_abs, q_rope, c_new, kr_new = _mla_qc(x, p, cfg, positions)
     ckv = cache["c_kv"]
     krp = cache["k_rope"]
-    if cfg.cache_dus:
+    if pos.ndim == 1:
+        if cfg.cache_dus:
+            ckv = jax.vmap(
+                lambda c, n, pp: jax.lax.dynamic_update_slice_in_dim(
+                    c, n.astype(c.dtype), pp, axis=0))(ckv, c_new, pos)
+            krp = jax.vmap(
+                lambda c, n, pp: jax.lax.dynamic_update_slice_in_dim(
+                    c, n.astype(c.dtype), pp, axis=0))(krp, kr_new, pos)
+        else:
+            oh = (jnp.arange(ckv.shape[1])[None, :]
+                  == pos[:, None]).astype(ckv.dtype)      # (B, S)
+            ckv = ckv * (1 - oh[:, :, None]) + c_new * oh[:, :, None]
+            krp = krp * (1 - oh[:, :, None]) + kr_new * oh[:, :, None]
+    elif cfg.cache_dus:
         ckv = jax.lax.dynamic_update_slice_in_dim(
             ckv, c_new.astype(ckv.dtype), pos, axis=1)
         krp = jax.lax.dynamic_update_slice_in_dim(

@@ -341,8 +341,14 @@ class LM:
             }
         return M.mamba_state_defs(cfg, batch)
 
-    def cache_specs(self, batch: int, max_len: int):
-        """ShapeDtypeStruct cache tree (stacked per scan group) + pos."""
+    def cache_specs(self, batch: int, max_len: int,
+                    per_slot_pos: bool = False):
+        """ShapeDtypeStruct cache tree (stacked per scan group) + pos.
+
+        ``per_slot_pos``: track one position per batch row — the slot
+        layout of the continuous-batching engine, where rows sit at
+        different sequence depths.
+        """
         cfg = self.cfg
 
         def stack_specs(tree, n):
@@ -368,14 +374,16 @@ class LM:
             kind = self._layer_kinds()[0]
             layers = {"blocks": stack_specs(
                 self._block_cache_specs(kind, batch, max_len), cfg.n_layers)}
+        pos_shape = (batch,) if per_slot_pos else ()
         return {"layers": layers,
-                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+                "pos": jax.ShapeDtypeStruct(pos_shape, jnp.int32)}
 
-    def init_cache(self, batch: int, max_len: int):
+    def init_cache(self, batch: int, max_len: int,
+                   per_slot_pos: bool = False):
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                            self.cache_specs(batch, max_len))
+                            self.cache_specs(batch, max_len, per_slot_pos))
 
-    def cache_pspecs(self, rules):
+    def cache_pspecs(self, rules, per_slot_pos: bool = False):
         """PartitionSpecs matching cache_specs structure."""
         from repro.parallel.sharding import logical_pspec
         cfg = self.cfg
@@ -395,12 +403,12 @@ class LM:
             elif path.endswith("/conv"):
                 names = (None, "batch", None, "d_inner")
             elif path.endswith("pos"):
-                return logical_pspec((), rules)
+                return logical_pspec(("batch",)[:ndim], rules)
             else:
                 names = (None, "batch") + (None,) * (ndim - 2)
             return logical_pspec(names[:ndim], rules)
 
-        specs = self.cache_specs(1, 2)
+        specs = self.cache_specs(1, 2, per_slot_pos)
 
         def walk(tree, prefix=""):
             if isinstance(tree, dict):
@@ -499,7 +507,12 @@ class LM:
                         "pos": jnp.asarray(seq, jnp.int32)}
 
     def decode_step(self, params, cache, tokens):
-        """tokens: (B, 1) -> logits (B, 1, Vp), updated cache."""
+        """tokens: (B, 1) -> logits (B, 1, Vp), updated cache.
+
+        ``cache["pos"]`` may be a scalar (fixed batch, every row at the
+        same depth) or a per-slot (B,) vector (continuous batching);
+        the attention/cache ops handle either rank.
+        """
         pos = cache["pos"]
         x = self._embed_inputs(params, {"tokens": tokens})
         x, layers, _ = self._run_stack(params, x, "decode",

@@ -1,1 +1,4 @@
-from repro.serving.engine import ServeEngine, Request  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    ContinuousBatchingEngine, Request, ServeEngine,
+    attribute_request_energy,
+)

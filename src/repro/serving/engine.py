@@ -1,19 +1,36 @@
-"""Batched serving engine: prefill + decode with a persistent KV cache.
+"""Serving engines: fixed-batch and slot-based continuous batching.
 
-The engine services request batches (from the loadgen scenarios) with a
-fixed-batch continuous loop: incoming prompts are prefetched into the
-cache, then tokens are decoded step-by-step for the whole batch.  On
-the production mesh the cache is sequence-sharded over the model axis
-(distributed flash-decoding); on CPU the same code runs unsharded.
+Two engines share the ``Request`` contract:
+
+``ServeEngine`` (fixed batch)
+    Services one batch synchronously: every request prefills together,
+    then the whole batch decodes in lock-step for ``max(max_new_tokens)``
+    steps, round-tripping each token through the host.  Simple, but the
+    batch blocks on its longest request and pays one device->host sync
+    per token.
+
+``ContinuousBatchingEngine`` (slot-based, the Server-scenario hot path)
+    A persistent decode batch of ``n_slots`` rows backed by a
+    preallocated KV cache with a per-slot position vector.  Finished
+    slots are retired and refilled from an admission queue *mid-flight*
+    (a batch-1 prefill scattered into the slot's cache rows) instead of
+    blocking on stragglers.  Decoding runs ``chunk_steps`` tokens fully
+    on device (``lax.fori_loop`` + greedy argmax + per-slot done flags),
+    so the host syncs once per chunk instead of once per token.
+
+On the production mesh the cache is sequence-sharded over the model
+axis (distributed flash-decoding); on CPU the same code runs unsharded.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.parallel.sharding import ShardingRules, sharding_ctx
 
@@ -28,9 +45,24 @@ class Request:
     first_token_s: Optional[float] = None
     done_s: Optional[float] = None
     output: Optional[list] = None
+    energy_j: Optional[float] = None  # filled by attribute_request_energy
+
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    def tpot_s(self) -> Optional[float]:
+        """Time per output token after the first (decode cadence)."""
+        if self.done_s is None or self.first_token_s is None:
+            return None
+        n = max(1, len(self.output or []) - 1)
+        return (self.done_s - self.first_token_s) / n
 
 
 class ServeEngine:
+    """Fixed-batch engine (the seed baseline, kept for comparison)."""
+
     def __init__(self, model, params, *, max_len: int = 256,
                  batch_size: int = 8,
                  rules: Optional[ShardingRules] = None):
@@ -82,3 +114,207 @@ class ServeEngine:
 
     def tokens_per_request(self, requests: list[Request]) -> int:
         return sum(len(r.output or []) for r in requests)
+
+
+class ContinuousBatchingEngine:
+    """Slot-based continuous batching with an on-device sampling loop.
+
+    Usage::
+
+        eng = ContinuousBatchingEngine(model, params, max_len=96,
+                                       n_slots=4, chunk_steps=8)
+        done = eng.serve(requests)          # honors Request.arrival_s
+
+    Per decode chunk the host performs exactly one device->host sync
+    (``host_syncs`` counts them); tokens, greedy sampling, per-slot
+    position advance and done flags all stay on device inside a
+    ``lax.fori_loop``.
+    """
+
+    def __init__(self, model, params, *, max_len: int = 256,
+                 n_slots: int = 8, chunk_steps: int = 8,
+                 rules: Optional[ShardingRules] = None):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.n_slots = n_slots
+        self.chunk_steps = chunk_steps
+        self.rules = rules
+        self.host_syncs = 0            # decode-chunk device->host syncs
+        self._prefill_slot = jax.jit(self._prefill_slot_impl,
+                                     donate_argnums=(1,))
+        self._decode_chunk = jax.jit(self._decode_chunk_impl,
+                                     donate_argnums=(1,))
+        self.reset()
+
+    # -- device state ---------------------------------------------------
+    def reset(self):
+        """Fresh slot state: empty cache, zero positions, no budgets."""
+        cache = self.model.init_cache(self.n_slots, self.max_len,
+                                      per_slot_pos=True)
+        self.state = {
+            "cache": cache,
+            "tok": jnp.zeros((self.n_slots,), jnp.int32),
+            "remaining": jnp.zeros((self.n_slots,), jnp.int32),
+        }
+
+    def _prefill_slot_impl(self, params, state, tokens, slot, budget):
+        """Prefill one prompt and splice it into slot ``slot``.
+
+        ``tokens``: (1, S) prompt.  The batch-1 prefill cache is
+        scattered into batch row ``slot`` of every layer's state (batch
+        is axis 1 of the stacked layer trees), the slot's position is
+        set to the prompt length, and the first greedy token seeds the
+        decode loop.  Unrelated slots' cache rows are untouched.
+        """
+        with sharding_ctx(self.rules):
+            logits, one = self.model.prefill(params, {"tokens": tokens},
+                                             max_len=self.max_len)
+        cache = state["cache"]
+        layers = jax.tree.map(
+            lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+                big, small.astype(big.dtype), slot, axis=1),
+            cache["layers"], one["layers"])
+        pos = cache["pos"].at[slot].set(one["pos"].astype(jnp.int32))
+        tok0 = jnp.argmax(logits[0, -1], -1).astype(jnp.int32)
+        return {
+            "cache": {"layers": layers, "pos": pos},
+            "tok": state["tok"].at[slot].set(tok0),
+            "remaining": state["remaining"].at[slot].set(
+                jnp.maximum(budget - 1, 0)),
+        }, tok0
+
+    def _decode_chunk_impl(self, params, state):
+        """Decode ``chunk_steps`` tokens for every live slot on device.
+
+        Inactive slots (remaining == 0) hold: their position does not
+        advance and their last token is re-emitted into the buffer (the
+        host ignores those rows).  Their cache row does receive a
+        garbage write at its frozen position, which is safe: the row is
+        fully overwritten by the next prefill-into-slot.
+        """
+        def body(i, st):
+            cache, tok, remaining, buf = st
+            active = remaining > 0
+            pos_prev = cache["pos"]
+            with sharding_ctx(self.rules):
+                logits, cache = self.model.decode_step(params, cache,
+                                                       tok[:, None])
+            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            tok = jnp.where(active, nxt, tok)
+            cache = dict(cache, pos=jnp.where(active, pos_prev + 1,
+                                              pos_prev))
+            buf = jax.lax.dynamic_update_slice(buf, tok[:, None], (0, i))
+            remaining = remaining - active.astype(jnp.int32)
+            return (cache, tok, remaining, buf)
+
+        buf0 = jnp.zeros((self.n_slots, self.chunk_steps), jnp.int32)
+        cache, tok, remaining, buf = jax.lax.fori_loop(
+            0, self.chunk_steps, body,
+            (state["cache"], state["tok"], state["remaining"], buf0))
+        return {"cache": cache, "tok": tok, "remaining": remaining}, buf
+
+    # -- host orchestration ---------------------------------------------
+    def serve(self, requests: list[Request],
+              now: Callable[[], float] = time.monotonic,
+              sleep: Callable[[float], None] = time.sleep,
+              honor_arrivals: bool = True) -> list[Request]:
+        """Service ``requests``, admitting each at its ``arrival_s``.
+
+        Returns the completed requests (arrival order not preserved —
+        short requests overtake stragglers).  ``first_token_s`` and
+        ``done_s`` are stamped in seconds since serve() start, i.e. on
+        the same clock as ``arrival_s`` (so latency = done_s -
+        arrival_s, and the stamps line up with Director power samples
+        that start at t=0).  With ``honor_arrivals=False`` the queue is
+        drained as fast as slots free up (Offline scenario).
+        """
+        self.reset()
+        queue = collections.deque(
+            sorted(requests, key=lambda r: (r.arrival_s, r.rid)))
+        slots: list[Optional[Request]] = [None] * self.n_slots
+        slot_left = [0] * self.n_slots     # host shadow of `remaining`
+        done: list[Request] = []
+        t0 = now()
+        while queue or any(s is not None for s in slots):
+            t = now() - t0
+            # admit arrived requests into free slots (prefill-into-slot)
+            for b in range(self.n_slots):
+                if slots[b] is not None or not queue:
+                    continue
+                if honor_arrivals and queue[0].arrival_s > t:
+                    break
+                r = queue.popleft()
+                prompt = jnp.asarray(r.prompt, jnp.int32)[None]
+                assert prompt.shape[1] + r.max_new_tokens <= self.max_len, \
+                    (prompt.shape[1], r.max_new_tokens, self.max_len)
+                self.state, tok0 = self._prefill_slot(
+                    self.params, self.state, prompt,
+                    jnp.asarray(b, jnp.int32),
+                    jnp.asarray(r.max_new_tokens, jnp.int32))
+                first = int(tok0)          # blocks -> true TTFT
+                r.first_token_s = now() - t0
+                r.output = [first][: r.max_new_tokens]  # budget 0 -> []
+                if r.max_new_tokens <= 1:
+                    r.done_s = r.first_token_s
+                    done.append(r)
+                else:
+                    slots[b] = r
+                    slot_left[b] = r.max_new_tokens - 1
+            if not any(s is not None for s in slots):
+                if not queue:
+                    break
+                if honor_arrivals:
+                    dt = queue[0].arrival_s - (now() - t0)
+                    if dt > 0:
+                        sleep(dt)
+                continue
+            # one fused multi-token chunk; a single host sync after it
+            self.state, buf = self._decode_chunk(self.params, self.state)
+            buf_np = np.asarray(jax.device_get(buf))
+            self.host_syncs += 1
+            t_chunk = now() - t0
+            for b in range(self.n_slots):
+                r = slots[b]
+                if r is None:
+                    continue
+                take = min(slot_left[b], self.chunk_steps)
+                r.output.extend(int(x) for x in buf_np[b, :take])
+                slot_left[b] -= take
+                if slot_left[b] == 0:       # retire; slot free to refill
+                    r.done_s = t_chunk
+                    done.append(r)
+                    slots[b] = None
+        return done
+
+    def tokens_per_request(self, requests: list[Request]) -> int:
+        return sum(len(r.output or []) for r in requests)
+
+
+def attribute_request_energy(requests: list[Request],
+                             times_s: np.ndarray,
+                             watts: np.ndarray) -> dict[int, float]:
+    """Split measured system energy across in-flight requests.
+
+    ``times_s``/``watts``: the Director's power samples (seconds since
+    run start — the same clock the engine stamps requests on).  Each
+    sample interval's energy is divided equally among the requests in
+    flight (arrival <= t < done) during it; idle intervals are dropped.
+    Fills ``Request.energy_j`` and returns {rid: joules}.
+    """
+    times_s = np.asarray(times_s, float)
+    watts = np.asarray(watts, float)
+    per: dict[int, float] = {r.rid: 0.0 for r in requests}
+    spans = [(r.rid, r.arrival_s, r.done_s) for r in requests
+             if r.done_s is not None]
+    for i in range(len(times_s) - 1):
+        t_lo, t_hi = times_s[i], times_s[i + 1]
+        e = watts[i] * (t_hi - t_lo)
+        live = [rid for rid, a, d in spans if a < t_hi and d > t_lo]
+        if not live:
+            continue
+        for rid in live:
+            per[rid] += e / len(live)
+    for r in requests:
+        r.energy_j = per.get(r.rid)
+    return per

@@ -84,6 +84,33 @@ def test_decode_attention_allclose(b, h, kvh, d, s, pos, dtype):
                                np.asarray(ref, np.float32), **TOLS[dtype])
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_ragged_allclose(dtype):
+    """Per-slot pos vector: every batch row attends to its own depth."""
+    b, h, kvh, d, s = 4, 8, 2, 64, 1024
+    pos = jnp.asarray([0, 777, 1023, 300], jnp.int32)     # ragged depths
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d), dtype)
+    kc = jax.random.normal(ks[1], (b, s, kvh, d), dtype)
+    vc = jax.random.normal(ks[2], (b, s, kvh, d), dtype)
+    out = decode_attention(q, kc, vc, pos, interpret=True)
+    g = h // kvh
+    qr = q[:, 0].reshape(b * kvh, g, d)
+    kr = kc.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+    vr = vc.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+    ref = decode_attention_ref(qr, kr, vr, jnp.repeat(pos, kvh))
+    ref = ref.reshape(b, kvh, g, d).reshape(b, 1, h, d)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOLS[dtype])
+    # each row must also equal a standalone scalar-pos call at its depth
+    for i, p in enumerate([0, 777, 1023, 300]):
+        solo = decode_attention(q[i:i + 1], kc[i:i + 1], vc[i:i + 1],
+                                jnp.asarray(p, jnp.int32), interpret=True)
+        np.testing.assert_allclose(np.asarray(out[i], np.float32),
+                                   np.asarray(solo[0], np.float32),
+                                   **TOLS[dtype])
+
+
 @pytest.mark.parametrize("m,k,n", [(256, 256, 256), (300, 500, 260),
                                    (128, 1024, 512)])
 @pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])

@@ -1,6 +1,11 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dep: property tests are skipped, not collection-fatal")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (MLPerfLogger, StepWork, SystemPowerModel, roofline,
                         summarize)
