@@ -48,9 +48,11 @@ def main(argv=None) -> None:
                 kw["smoke"] = True
             for row in mod.csv(**kw):
                 print(row)
-        except Exception:  # noqa: BLE001 — report all benches
+        except Exception as e:  # noqa: BLE001 — report all benches
             failures += 1
-            print(f"{name},0.0,ERROR", file=sys.stdout)
+            # which exception class fired goes into the derived column
+            # (CSV stays 3 columns); the traceback goes to stderr
+            print(f"{name},0.0,ERROR:{type(e).__name__}", file=sys.stdout)
             traceback.print_exc(file=sys.stderr)
     if failures:
         raise SystemExit(1)

@@ -1,13 +1,16 @@
 """Serving throughput: fixed-batch vs continuous batching under a
 Poisson Server load with mixed ``max_new_tokens``.
 
-Measures real CPU wall time of both engines on the same reduced config
-and the same arrival schedule, then derives tokens/s and tokens/Joule
-(analytic busy-watts x duration).  The continuous engine wins on two
-axes this benchmark isolates: finished slots are refilled mid-flight
-instead of blocking the batch on its longest request, and the decode
-loop runs whole chunks on device (one host sync per ``chunk_steps``
-tokens instead of per token).
+Both engines run behind the ``repro.harness`` API: each is a SUT with
+a ``serve_queue``, driven by the queue-form ``Server`` scenario through
+``PowerRun`` — so the measured tokens/Joule comes from the Director's
+integrated energy, not a hand-multiplied watts x duration.  Both SUTs
+declare the same constant busy-watts power source, so the tok/J ratio
+isolates scheduling + host-sync overhead, which the continuous engine
+wins on two axes: finished slots are refilled mid-flight instead of
+blocking the batch on its longest request, and the decode loop runs
+whole chunks on device (one host sync per ``chunk_steps`` tokens
+instead of per token).
 """
 from __future__ import annotations
 
@@ -21,53 +24,61 @@ MAX_LEN = 64
 MIX = (4, 24, 8, 16)          # mixed budgets: stragglers + short ones
 
 
-def _requests(cfg, n, qps, seed=0):
+def _make_request(cfg, i, arrival_s):
     import jax
-    from repro.core.loadgen import poisson_arrivals
     from repro.serving import Request
 
-    arr = poisson_arrivals(qps, min_duration_s=0.0, seed=seed,
-                           min_queries=n)[:n]
     key = jax.random.PRNGKey(7)
-    return [Request(rid=i,
-                    prompt=np.asarray(jax.random.randint(
-                        jax.random.fold_in(key, i), (PROMPT_LEN,), 0,
-                        cfg.vocab_size)),
-                    max_new_tokens=MIX[i % len(MIX)],
-                    arrival_s=float(a))
-            for i, a in enumerate(arr)]
+    return Request(rid=i,
+                   prompt=np.asarray(jax.random.randint(
+                       jax.random.fold_in(key, i), (PROMPT_LEN,), 0,
+                       cfg.vocab_size)),
+                   max_new_tokens=MIX[i % len(MIX)],
+                   arrival_s=float(arrival_s))
 
 
-def _run_fixed(engine, requests):
-    """Fixed-batch baseline: batches formed in arrival order; each
-    batch starts once its last member has arrived and the previous
-    batch finished (the whole batch then blocks on its longest
-    request).  Returns (duration_s, total_tokens)."""
-    t = 0.0
-    tokens = 0
-    for i in range(0, len(requests), engine.batch):
-        group = requests[i:i + engine.batch]
-        ready = max(r.arrival_s for r in group)
-        t0 = time.perf_counter()
-        engine.run_batch(group)
-        dt = time.perf_counter() - t0
-        t = max(t, ready) + dt
-        tokens += sum(len(r.output) for r in group)
-    return t, tokens
+def _fixed_serve_queue(engine, cfg):
+    """Fixed-batch baseline behind the ``serve_queue`` contract:
+    batches formed in arrival order; each batch starts once its last
+    member has arrived and the previous batch finished (the whole
+    batch then blocks on its longest request).  Stamps run on the
+    modeled timeline so latency = done_s - arrival_s is honest."""
+
+    def serve(arrivals):
+        reqs = [_make_request(cfg, i, a)
+                for i, (_, a) in enumerate(arrivals)]
+        t = 0.0
+        done = []
+        for i in range(0, len(reqs), engine.batch):
+            group = reqs[i:i + engine.batch]
+            base = max(t, max(r.arrival_s for r in group))
+            wall0 = time.perf_counter()
+            engine.run_batch(
+                group, now=lambda: base + (time.perf_counter() - wall0))
+            t = base + (time.perf_counter() - wall0)
+            done.extend(group)
+        return done
+
+    return serve
 
 
-def _run_continuous(engine, requests):
-    t0 = time.perf_counter()
-    done = engine.serve(requests)
-    dt = time.perf_counter() - t0
-    return dt, sum(len(r.output) for r in done)
+def _continuous_serve_queue(engine, cfg):
+    def serve(arrivals):
+        reqs = [_make_request(cfg, i, a)
+                for i, (_, a) in enumerate(arrivals)]
+        return engine.serve(reqs)
+
+    return serve
 
 
 def csv(smoke: bool = False) -> list[str]:
     import jax
 
     from repro.configs import get_config, reduce_config
-    from repro.core.power_model import StepWork, SystemPowerModel
+    from repro.core.analyzer import AnalyzerSpec, VirtualAnalyzer
+    from repro.core.director import Director
+    from repro.core.power_model import SystemPowerModel
+    from repro.harness import CallableSUT, PowerRun, Server, throughput_watts
     from repro.hw import EDGE_SYSTEM
     from repro.models import build_model
     from repro.models.param import init_params
@@ -85,26 +96,33 @@ def csv(smoke: bool = False) -> list[str]:
     qps = 200.0
 
     meter = SystemPowerModel(EDGE_SYSTEM, 1)
-    busy_w = meter.system_watts(StepWork(
-        flops=2.0 * cfg.param_count() * 100.0,
-        hbm_bytes=2.0 * cfg.param_count() * 100.0 / 8))
+    busy_w = throughput_watts(meter, cfg, 100.0)
 
     # warm both jit caches outside the timed region
-    _run_fixed(fixed, _requests(cfg, SLOTS, qps, seed=99))
-    _run_continuous(cont, _requests(cfg, SLOTS, qps, seed=98))
+    warm = [(None, 0.0)] * SLOTS
+    _fixed_serve_queue(fixed, cfg)(warm)
+    _continuous_serve_queue(cont, cfg)(warm)
 
+    scenario = Server(target_qps=qps, latency_slo_s=10.0,
+                      min_duration_s=0.0, min_queries=n, mode="queue")
     rows = []
     results = {}
-    for name, runner, eng in (("fixed", _run_fixed, fixed),
-                              ("continuous", _run_continuous, cont)):
-        reqs = _requests(cfg, n, qps)
-        dur, tokens = runner(eng, reqs)
-        tok_s = tokens / dur
-        tok_j = tokens / (busy_w * dur)
-        results[name] = tok_s
+    for name, serve in (("fixed", _fixed_serve_queue(fixed, cfg)),
+                        ("continuous", _continuous_serve_queue(cont, cfg))):
+        sut = CallableSUT(name=f"serving-{name}", serve_queue=serve,
+                          power=busy_w)
+        # runs last well under a second: sample at 1 kHz so the energy
+        # window resolves each engine's actual duration
+        director = Director(analyzer=VirtualAnalyzer(
+            AnalyzerSpec(sample_hz=1000.0), seed=0), seed=0)
+        r = PowerRun(sut, scenario, seed=0, director=director).run()
+        m = r.outcome.server
+        dur = r.outcome.result.duration_s
+        tok_j = m.total_tokens / max(r.summary.energy_j, 1e-12)
+        results[name] = m.tokens_per_s
         rows.append(f"serving_{name}_qps{qps:.0f},"
-                    f"{dur / tokens * 1e6:.1f},"
-                    f"{tok_s:.1f}toks/s;{tok_j:.3f}tok/J")
+                    f"{dur / m.total_tokens * 1e6:.1f},"
+                    f"{m.tokens_per_s:.1f}toks/s;{tok_j:.3f}tok/J")
     rows.append(f"serving_continuous_speedup,0.0,"
                 f"{results['continuous'] / results['fixed']:.2f}x;"
                 f"chunk_syncs={cont.host_syncs}")

@@ -1,31 +1,28 @@
-"""Serving under measurement, both engines:
+"""Serving under measurement, both engines, via ``repro.harness``:
 
-1. Offline scenario — the fixed-batch ``ServeEngine`` issues blocking
-   batches through ``run_offline`` (throughput-bound, the seed path).
+1. Offline scenario — the fixed-batch ``ServeEngine`` behind
+   ``ServeEngineSUT`` issues blocking batches (throughput-bound).
 2. Server scenario — Poisson arrivals feed the admission queue of the
-   slot-based ``ContinuousBatchingEngine`` (``run_server_queue``).
+   slot-based ``ContinuousBatchingEngine`` (``ContinuousBatchingSUT``).
    Finished slots are refilled mid-flight and decoding runs in
-   on-device chunks (one host sync per chunk), so the reported
-   TTFT/TPOT reflect real queueing + continuous batching, not
-   batch-of-stragglers lockstep.  The Director's power samples are then
-   attributed per request (``attribute_request_energy``).
+   on-device chunks, so the reported TTFT/TPOT reflect real queueing +
+   continuous batching.  ``PowerRun`` attributes the Director's power
+   samples per request automatically (``per_request_energy_j``).
+
+Each run is one call: ``PowerRun(sut, scenario).run()`` — loadgen,
+Director protocol, summarizer, and compliance review included.
 
   PYTHONPATH=src python examples/serve_power.py
 """
-import time
-
 import jax
 import numpy as np
 
 from repro.configs import get_config, reduce_config
-from repro.core import (Clock, Director, QuerySampleLibrary, StepWork,
-                        SystemDescription, SystemPowerModel, review,
-                        run_offline, run_server_queue, summarize)
-from repro.hw import EDGE_SYSTEM
+from repro.harness import (ContinuousBatchingSUT, Offline, PowerRun,
+                           ServeEngineSUT, Server)
 from repro.models import build_model
 from repro.models.param import init_params
-from repro.serving import (ContinuousBatchingEngine, Request, ServeEngine,
-                           attribute_request_energy)
+from repro.serving import ContinuousBatchingEngine, Request, ServeEngine
 
 
 def main():
@@ -47,17 +44,18 @@ def main():
     engine = ServeEngine(model, params, max_len=96, batch_size=4)
     engine.run_batch([make_req(100 + j) for j in range(4)])  # compile
 
-    def issue_batch(samples):
-        t0 = time.perf_counter()
-        engine.run_batch([make_req(4 * samples[0]["idx"] + j)
-                          for j in range(4)])
-        return time.perf_counter() - t0
-
-    qsl = QuerySampleLibrary(32, lambda i: {"idx": i})
-    offline = run_offline(issue_batch, qsl, batch=4, clock=Clock(),
-                          min_duration_s=60.0)
-    print(f"Offline: {offline.n_queries} queries, "
-          f"{offline.qps:.2f} samples/s, p90 {offline.p90 * 1e3:.1f} ms")
+    offline_sut = ServeEngineSUT(
+        engine, cfg, name="granite-3-2b-offline",
+        make_requests=lambda samples: [make_req(4 * s["idx"] + j)
+                                       for s in samples[:1]
+                                       for j in range(4)])
+    offline = PowerRun(offline_sut, Offline(batch=4, min_duration_s=60.0),
+                       seed=0).run()
+    res = offline.outcome.result
+    print(f"Offline: {res.n_queries} queries, {res.qps:.2f} samples/s, "
+          f"p90 {res.p90 * 1e3:.1f} ms, "
+          f"{offline.samples_per_joule:.4f} samples/J "
+          f"(review {'ACCEPTED' if offline.passed else 'REJECTED'})")
 
     # ------------------------------------------------------------------
     # Server: Poisson arrivals -> continuous-batching admission queue.
@@ -68,58 +66,29 @@ def main():
                                     chunk_steps=4)
     cont.serve([make_req(200, new_tokens=4)],
                honor_arrivals=False)                  # warmup/compile
-    done_box = {}
-
-    def serve_fn(arrivals):
-        reqs = [make_req(i, arrival_s=a, new_tokens=(4, 12, 8)[i % 3])
-                for i, (_, a) in enumerate(arrivals)]
-        done = cont.serve(reqs)
-        done_box["reqs"] = done
-        return done
-
-    server = run_server_queue(serve_fn, qsl, target_qps=offline.qps * 2,
-                              latency_slo_s=10.0, min_duration_s=0.5)
-    res = server.result
-    print(f"Server:  {res.qps:.2f} qps, {server.tokens_per_s:.1f} tok/s, "
-          f"p99 {res.p99 * 1e3:.1f} ms, SLO met: {server.slo_met}")
-    print(f"  TTFT p99 {server.ttft_p(99) * 1e3:.1f} ms, "
-          f"TPOT mean {np.mean(server.tpot_s) * 1e3:.2f} ms, "
+    server_sut = ContinuousBatchingSUT(
+        cont, cfg, name="granite-3-2b-server",
+        make_request=lambda i, s, a: make_req(
+            i, arrival_s=a, new_tokens=(4, 12, 8)[i % 3]))
+    run = PowerRun(server_sut,
+                   Server(target_qps=res.qps * 2, latency_slo_s=10.0,
+                          mode="queue", min_duration_s=0.5),
+                   seed=0)
+    r = run.run()
+    m = r.outcome.server
+    print(f"Server:  {r.outcome.result.qps:.2f} qps, "
+          f"{m.tokens_per_s:.1f} tok/s, "
+          f"p99 {r.outcome.result.p99 * 1e3:.1f} ms, "
+          f"SLO met: {r.outcome.slo_met}")
+    print(f"  TTFT p99 {m.ttft_p(99) * 1e3:.1f} ms, "
+          f"TPOT mean {m.tpot_mean * 1e3:.2f} ms, "
           f"host syncs {cont.host_syncs}")
-
-    # ------------------------------------------------------------------
-    # Director-measured energy for the Server run, per-request shares
-    # ------------------------------------------------------------------
-    meter = SystemPowerModel(EDGE_SYSTEM, 1)
-    watts = meter.system_watts(StepWork(
-        flops=2.0 * cfg.param_count() * server.tokens_per_s,
-        hbm_bytes=2.0 * cfg.param_count()))
-    d = Director(seed=0)
-
-    def sut_run(log):
-        log.run_start(0.0)
-        log.result("samples_processed", res.n_queries,
-                   res.duration_s * 1e3)
-        log.run_stop(res.duration_s * 1e3)
-        return res.duration_s
-
-    perf_log, power_log = d.run_measurement(
-        sut_run=sut_run, power_source=lambda t: np.full_like(t, watts))
-    s = summarize(perf_log.events, power_log.events)
-    samples = [(ev.time_ms / 1e3, float(ev.value))
-               for ev in power_log.events if ev.key == "power_w"]
-    per_req = attribute_request_energy(
-        done_box["reqs"], np.asarray([t for t, _ in samples]),
-        np.asarray([w for _, w in samples]))
-    e = np.asarray(list(per_req.values()))
-    print(f"energy: {s.energy_j:.1f} J -> "
-          f"{s.samples_per_joule:.4f} samples/J, "
-          f"{server.total_tokens / max(s.energy_j, 1e-9):.3f} tok/J, "
+    e = np.asarray(list((r.per_request_energy_j or {}).values()))
+    print(f"energy: {r.summary.energy_j:.1f} J -> "
+          f"{r.samples_per_joule:.4f} samples/J, "
+          f"{m.total_tokens / max(r.summary.energy_j, 1e-9):.3f} tok/J, "
           f"per-request mean {e.mean():.2f} J")
-    rep = review(perf_log.events, power_log.events,
-                 SystemDescription(scale="edge", max_system_watts=60,
-                                   idle_system_watts=8),
-                 min_duration_s=0.5)
-    print(rep.render())
+    print(r.report.render())
 
 
 if __name__ == "__main__":

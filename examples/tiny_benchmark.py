@@ -1,24 +1,28 @@
 """MLPerf-Tiny-scale benchmark: keyword spotting, single-stream, with
-pin-demarcated energy capture through the I/O manager — the µW end of
-the paper's range.  Reports energy/inference and the 1/Joules metric.
+duty-cycled MCU energy capture — the µW end of the paper's range.
 
-  PYTHONPATH=src python examples/tiny_benchmark.py
+The jitted forward runs for real on this CPU (true latencies); the
+energy side models an always-on detector at 4 Hz frames behind
+``TinySUT``, whose power source replays the MCU waveform (active burst
+per frame, sleep floor between).  ``PowerRun`` drives the whole
+methodology — loadgen, Director + µW-class analyzer, summarizer,
+compliance — in one call, and the I/O manager cross-checks the
+per-inference energy from the pin-demarcated waveform.
+
+  PYTHONPATH=src python -m examples.tiny_benchmark
 """
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (Clock, IOManager, MLPerfLogger, QuerySampleLibrary,
-                        SystemDescription, TinyPowerModel, review,
-                        run_single_stream, summarize)
+from repro.core import IOManager, TinyPowerModel
+from repro.harness import PowerRun, SingleStream, TinySUT
 from repro.models import tiny as tiny_mod
 from repro.models.param import init_params
 
 
-def main():
+def main(min_duration_s: float = 60.0):
     cfg = get_config("tiny-kws")
     model = tiny_mod.TinyModel(cfg)
     params = init_params(model.param_defs(), jax.random.PRNGKey(0))
@@ -26,50 +30,42 @@ def main():
     x = jnp.ones((1, tiny_mod.IN_T, tiny_mod.IN_F))
     fwd(params, x).block_until_ready()
 
-    # --- real single-stream latency on this CPU
-    def issue(sample):
-        t0 = time.perf_counter()
-        fwd(params, x).block_until_ready()
-        return time.perf_counter() - t0
-
-    qsl = QuerySampleLibrary(64, lambda i: {"idx": i})
-    res = run_single_stream(issue, qsl, clock=Clock(), min_queries=300)
-    print(f"single-stream: {res.n_queries} inferences, "
-          f"p50 {res.p50 * 1e6:.0f} µs, p90 {res.p90 * 1e6:.0f} µs")
-
-    # --- MCU energy model + I/O-manager capture
-    tm = TinyPowerModel()
     macs, sram = tiny_mod.macs(cfg), tiny_mod.sram_bytes(cfg)
     print(f"workload: {macs / 1e3:.0f}k MACs, {sram / 1024:.0f} KiB SRAM")
+
+    # --- one measured run: real forward latency, modeled 4 Hz detector
     period = 0.25                        # always-on detector, 4 Hz frames
-    t, amps, pin = tm.waveform(macs, sram, n_inferences=256,
-                               period_s=period, sample_hz=50_000)
-    io = IOManager()
-    e_inf, n = io.energy_per_inference(t, amps, pin)
+    sut = TinySUT(lambda: fwd(params, x).block_until_ready(),
+                  macs=macs, sram_bytes=sram, period_s=period,
+                  name="tiny-kws")
+    scenario = SingleStream(min_duration_s=min_duration_s,
+                            min_queries=int(min_duration_s / period))
+    r = PowerRun(sut, scenario, seed=0).run()
+
+    lat = np.asarray(sut.real_latencies_s)
+    print(f"single-stream: {len(lat)} inferences, "
+          f"p50 {np.percentile(lat, 50) * 1e6:.0f} µs, "
+          f"p90 {np.percentile(lat, 90) * 1e6:.0f} µs (real CPU)")
+
+    n = r.outcome.result.n_queries
+    e_inf = r.summary.energy_j / n
+    tm = sut.model
     duty = tm.duty_cycle(macs, period)
-    avg_w = e_inf / period + tm.device.sleep_watts
-    print(f"captured {n} pin windows: {e_inf * 1e6:.2f} µJ/inference, "
+    print(f"measured: {r.summary.energy_j * 1e3:.2f} mJ over "
+          f"{r.summary.window_s:.0f} s -> {e_inf * 1e6:.2f} µJ/inference, "
           f"1/J metric = {1.0 / e_inf:.0f}")
     print(f"duty cycle {duty * 100:.2f}% -> average power "
-          f"{avg_w * 1e6:.1f} µW (µW regime, Fig. 2)")
+          f"{r.summary.avg_watts * 1e6:.1f} µW (µW regime, Fig. 2)")
 
-    # --- standardized logs + compliance
-    perf = MLPerfLogger("perf")
-    perf.run_start(0.0)
-    perf.result("samples_processed", n, n * period * 1e3)
-    perf.run_stop(n * period * 1e3)
-    power = MLPerfLogger("power")
-    stride = max(1, len(t) // 64000)
-    for ti, ai in zip(t[::stride], amps[::stride]):
-        power.power_sample(ti * 1e3, ai * tm.device.supply_volts)
-    s = summarize(perf.events, power.events)
-    print(f"summarizer: {s.energy_j * 1e3:.2f} mJ total, "
-          f"{s.inv_joules:.1f} samples/J")
-    rep = review(perf.events, power.events,
-                 SystemDescription(scale="tiny", instrument="io-manager",
-                                   max_system_watts=0.01,
-                                   idle_system_watts=5e-5))
-    print(rep.render())
+    # --- I/O-manager cross-check on the pin-demarcated waveform
+    t, amps, pin = TinyPowerModel().waveform(
+        macs, sram, n_inferences=min(n, 64), period_s=period,
+        sample_hz=50_000)
+    e_pin, n_pin = IOManager().energy_per_inference(t, amps, pin)
+    print(f"io-manager cross-check: {n_pin} pin windows, "
+          f"{e_pin * 1e6:.2f} µJ/inference")
+    print(r.report.render())
+    return r
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: the full test suite plus the benchmark smoke sweep.
+# Tier-1 CI gate: the full test suite plus the benchmark smoke sweep
+# and a harness smoke through the public repro.harness API.
 # Mirrors ROADMAP.md's "Tier-1 verify" command; run from the repo root.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -8,3 +9,6 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 python -m benchmarks.run --smoke
+# harness smoke: one PowerRun end to end (SUT -> scenario -> Director ->
+# summarizer -> compliance); fails the gate on any public-API regression
+python -m examples.tiny_benchmark

@@ -10,8 +10,9 @@ from repro.core.analyzer import (  # noqa: F401
 )
 from repro.core.loadgen import (  # noqa: F401
     Clock, LoadgenResult, QuerySampleLibrary, ServerMetrics,
-    loops_for_min_duration, poisson_arrivals, run_offline, run_server,
-    run_server_queue, run_single_stream,
+    loops_for_min_duration, nan_percentile, poisson_arrivals,
+    run_multi_stream, run_offline, run_server, run_server_queue,
+    run_single_stream,
 )
 from repro.core.director import Director, NTPSync, PTDSession  # noqa: F401
 from repro.core.mlperf_log import (  # noqa: F401

@@ -5,6 +5,11 @@ The Director (server) NTP-syncs with the SUT (client), starts the PTD
 to run loadgen, collects both logs, and hands them to the summarizer.
 Everything runs in-process here, but the protocol steps, clock-offset
 correction, and the two-pass range mode are the real ones.
+
+This is protocol plumbing: benchmarks and examples should not wire
+``Director.run_measurement`` closures by hand — the public entry point
+is ``repro.harness.PowerRun``, which composes the Director protocol
+with a loadgen scenario, the summarizer, and the compliance review.
 """
 from __future__ import annotations
 
@@ -75,7 +80,13 @@ class Director:
         ``sut_run(perf_log) -> duration_s`` executes the workload and
         writes run_start/run_stop + results into the perf log (in SUT
         clock).  ``power_source(t) -> watts`` is the SUT's power draw.
+
+        Each call starts fresh perf/power logs, so one Director session
+        can be reused across measurements without the runs' windows and
+        samples bleeding into each other.
         """
+        self.perf_log = MLPerfLogger("perf")
+        self.power_log = MLPerfLogger("power")
         offset = NTPSync().sync(self.rng)
         self.clock_offset_ms = offset
         self.ptd.connect()

@@ -1,6 +1,15 @@
-"""Load generator: MLPerf Inference scenarios.
+"""Load generator: MLPerf Inference scenarios (the internal engine room).
+
+This module holds the raw scenario runners; the public measurement API
+is ``repro.harness`` (``PowerRun(sut, scenario).run()``), which wraps
+these runners together with the Director protocol, summarizer, and
+compliance review.  Prefer the harness in examples/benchmarks; call the
+runners directly only when composing a new scenario.
 
 - ``SingleStream``: one query at a time, latency-bound (tiny/edge).
+- ``MultiStream``: bursts of ``n_streams`` samples per query; the
+  per-query latency is the completion time of the whole burst (MLPerf
+  Inference edge rules; the metric is the p99 query latency).
 - ``Offline``: all samples issued at once, throughput-bound.
 - ``Server``: Poisson arrivals at a target QPS with latency SLO.
   Two forms: ``run_server`` (synchronous — each query blocks the SUT,
@@ -24,6 +33,19 @@ from typing import Callable, Optional
 import numpy as np
 
 MIN_DURATION_S = 60.0
+
+
+def nan_percentile(values: np.ndarray, p: float) -> float:
+    """Percentile with the empty-run guard shared by every latency path.
+
+    Empty runs return ``nan`` — with zero samples there is no defensible
+    tie-break between "fastest" and "slowest", so we refuse to invent
+    one rather than raise mid-report.
+    """
+    values = np.asarray(values, float)
+    if values.size == 0:
+        return float("nan")
+    return float(np.percentile(values, p))
 
 
 @dataclasses.dataclass
@@ -53,16 +75,9 @@ class LoadgenResult:
 
     def percentile(self, p: float) -> float:
         """Percentile over the cached sorted array (sorted once; the
-        p50/p90/p99 properties all reuse it).
-
-        Empty runs return ``nan`` — with zero samples there is no
-        defensible tie-break between "fastest" and "slowest", so we
-        refuse to invent one rather than raise mid-report.
-        """
-        lat = self._sorted_latencies
-        if lat.size == 0:
-            return float("nan")
-        return float(np.percentile(lat, p))
+        p50/p90/p99 properties all reuse it); nan on empty runs
+        (``nan_percentile``)."""
+        return nan_percentile(self._sorted_latencies, p)
 
     @property
     def p50(self):
@@ -109,6 +124,39 @@ def run_single_stream(issue: Callable[[dict], float], qsl: QuerySampleLibrary,
                          qps=i / dur, min_duration_met=dur >= min_duration_s)
 
 
+def run_multi_stream(issue_burst: Callable[[list[dict]], float],
+                     qsl: QuerySampleLibrary, *, n_streams: int = 8,
+                     min_duration_s: float = MIN_DURATION_S,
+                     min_queries: int = 270,
+                     clock: Optional[Clock] = None) -> LoadgenResult:
+    """MultiStream: each query is a burst of ``n_streams`` samples.
+
+    ``issue_burst(samples) -> latency_s`` services one whole burst; the
+    recorded per-query latency is the time for *all* of its samples to
+    complete (MLPerf Inference edge rules — the reported metric is the
+    p99 of these query latencies).  ``min_queries`` defaults to the
+    MLPerf minimum query count for the scenario (270).
+
+    ``n_queries`` counts queries (bursts); ``qps`` reports samples/s
+    (``n_queries * n_streams / duration``) so throughput metrics stay
+    comparable with Offline.
+    """
+    clock = clock or Clock()
+    lat = []
+    i = 0
+    t0 = clock.now()
+    while (clock.now() - t0 < min_duration_s) or (i < min_queries):
+        burst = [qsl.sample(i * n_streams + j) for j in range(n_streams)]
+        dt = issue_burst(burst)
+        lat.append(dt)
+        clock.advance(dt)
+        i += 1
+    dur = clock.now() - t0
+    return LoadgenResult("MultiStream", i, dur, np.asarray(lat),
+                         qps=i * n_streams / dur,
+                         min_duration_met=dur >= min_duration_s)
+
+
 def run_offline(issue_batch: Callable[[list[dict]], float],
                 qsl: QuerySampleLibrary, *, batch: int,
                 min_duration_s: float = MIN_DURATION_S,
@@ -132,9 +180,13 @@ def run_offline(issue_batch: Callable[[list[dict]], float],
 def run_server(issue: Callable[[dict], float], qsl: QuerySampleLibrary, *,
                target_qps: float, latency_slo_s: float,
                min_duration_s: float = MIN_DURATION_S,
-               seed: int = 0,
+               seed: int = 0, min_queries: int = 32,
                clock: Optional[Clock] = None) -> tuple[LoadgenResult, bool]:
-    """Poisson arrivals; returns (result, slo_met at p99)."""
+    """Poisson arrivals; returns (result, slo_met at p99).
+
+    ``min_queries`` extends the run past ``min_duration_s`` until at
+    least that many queries were issued (mirrors ``poisson_arrivals``).
+    """
     rng = np.random.default_rng(seed)
     clock = clock or Clock()
     t0 = clock.now()
@@ -142,7 +194,7 @@ def run_server(issue: Callable[[dict], float], qsl: QuerySampleLibrary, *,
     i = 0
     next_free = t0
     t_arrive = t0
-    while t_arrive - t0 < min_duration_s or i < 32:
+    while t_arrive - t0 < min_duration_s or i < min_queries:
         t_arrive += rng.exponential(1.0 / target_qps)
         service = issue(qsl.sample(i))
         start = max(t_arrive, next_free)          # queueing
@@ -181,9 +233,18 @@ class ServerMetrics:
     tokens_per_s: float
 
     def ttft_p(self, p: float) -> float:
-        if self.ttft_s.size == 0:
+        return nan_percentile(self.ttft_s, p)
+
+    def tpot_p(self, p: float) -> float:
+        return nan_percentile(self.tpot_s, p)
+
+    @property
+    def tpot_mean(self) -> float:
+        """Mean decode cadence; nan on runs with no multi-token request
+        (same empty-run guard as the percentile paths)."""
+        if self.tpot_s.size == 0:
             return float("nan")
-        return float(np.percentile(self.ttft_s, p))
+        return float(np.mean(self.tpot_s))
 
 
 def run_server_queue(serve: Callable[[list[tuple[dict, float]]], list],

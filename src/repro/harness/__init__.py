@@ -1,0 +1,32 @@
+"""``repro.harness`` — the public measurement API.
+
+One measurement protocol, uniformly applied (the paper's core
+contribution): wrap any system behind the ``SUT`` protocol, pick a
+``Scenario``, and
+
+    result = PowerRun(sut, scenario).run()
+
+runs loadgen + Director protocol + summarizer + compliance review and
+returns a ``SubmissionResult`` (metrics, Joules, review report, an
+``efficiency.Submission`` for trend analyses, and per-request energy
+when the SUT keeps request records).
+
+    from repro.harness import (CallableSUT, PowerRun, SingleStream,
+                               MultiStream, Offline, Server)
+
+    sut = CallableSUT(issue=lambda s: 0.01, power=42.0)
+    res = PowerRun(sut, SingleStream()).run()
+    assert res.passed
+    print(res.render())
+"""
+from repro.harness.sut import (  # noqa: F401
+    SUT, BaseSUT, CallableSUT, ContinuousBatchingSUT, ServeEngineSUT,
+    TinySUT, constant_power, throughput_watts,
+)
+from repro.harness.scenarios import (  # noqa: F401
+    SCENARIOS, MultiStream, Offline, Scenario, ScenarioOutcome, Server,
+    SingleStream,
+)
+from repro.harness.power_run import (  # noqa: F401
+    PowerRun, SubmissionResult, analyzer_for_scale,
+)

@@ -1,0 +1,174 @@
+"""One-call measured run: ``PowerRun(sut, scenario).run()``.
+
+Composes the full paper methodology around one scenario execution:
+
+1. run the scenario against the SUT (``repro.core.loadgen``),
+2. Director protocol — NTP sync, PTD connect, two-pass range probe,
+   concurrent power logging (``repro.core.director``),
+3. summarizer window extraction + trapezoidal energy integration
+   (``repro.core.summarizer``),
+4. compliance review against the submission rules
+   (``repro.core.compliance``),
+5. an ``efficiency.Submission`` record for trend analyses,
+6. per-request energy attribution when the SUT kept request records.
+
+The analyzer is picked per scale: tiny runs get a µW-class
+I/O-manager-grade instrument (kHz sampling, sub-µW offset error);
+edge/datacenter get the SPEC-approved WT310-class analyzer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import efficiency
+from repro.core.analyzer import AnalyzerSpec, VirtualAnalyzer
+from repro.core.compliance import ReviewReport, review
+from repro.core.director import Director
+from repro.core.loadgen import Clock, QuerySampleLibrary
+from repro.core.mlperf_log import MLPerfLogger
+from repro.core.summarizer import EnergySummary, summarize
+from repro.harness.scenarios import Scenario, ScenarioOutcome
+
+# µW-regime instrument: the WT310-class defaults (50 mW offset error,
+# 15 W bottom range) would drown a duty-cycled MCU trace.
+TINY_ANALYZER = AnalyzerSpec(
+    name="virtual-io-manager", sample_hz=2000.0, gain_error=0.001,
+    offset_error_w=1e-7, ranges_w=(1e-3, 1e-2, 1e-1, 1.0), counts=60_000)
+
+
+def analyzer_for_scale(scale: str, seed: int = 0) -> VirtualAnalyzer:
+    if scale == "tiny":
+        return VirtualAnalyzer(TINY_ANALYZER, seed=seed)
+    return VirtualAnalyzer(seed=seed)
+
+
+@dataclasses.dataclass
+class SubmissionResult:
+    """Everything a measured run produced, in one object."""
+
+    outcome: ScenarioOutcome
+    summary: EnergySummary
+    report: ReviewReport
+    submission: efficiency.Submission
+    perf_log: MLPerfLogger
+    power_log: MLPerfLogger
+    per_request_energy_j: Optional[dict] = None
+
+    @property
+    def passed(self) -> bool:
+        return self.report.passed
+
+    @property
+    def samples_per_joule(self) -> float:
+        if self.summary.samples_per_joule is not None:
+            return self.summary.samples_per_joule
+        return self.submission.samples_per_joule
+
+    def power_samples(self) -> tuple[np.ndarray, np.ndarray]:
+        """(times_s, watts) from the power log, SUT clock."""
+        return _power_samples(self.power_log)
+
+    def render(self) -> str:
+        o, s = self.outcome, self.summary
+        lines = [
+            f"{o.scenario}[{self.submission.workload}]: "
+            f"{o.result.n_queries} queries in {o.result.duration_s:.2f} s, "
+            f"{o.result.qps:.2f} samples/s, p99 {o.result.p99 * 1e3:.2f} ms"
+            + (f", SLO met: {o.slo_met}" if o.slo_met is not None else ""),
+            f"energy: {s.energy_j:.3f} J over {s.window_s:.2f} s "
+            f"({s.avg_watts:.3f} W avg) -> "
+            f"{self.samples_per_joule:.4f} samples/J",
+        ]
+        lines.append(self.report.render())
+        return "\n".join(lines)
+
+
+class PowerRun:
+    """One measured scenario run: ``PowerRun(sut, scenario).run()``.
+
+    ``qsl`` defaults to a 64-sample index library (most SUT adapters
+    build their own inputs from the sample index).  Pass a ``director``
+    to reuse a session across runs; otherwise one is created with the
+    scale-appropriate analyzer.
+    """
+
+    def __init__(self, sut, scenario: Scenario, *,
+                 qsl: Optional[QuerySampleLibrary] = None,
+                 director: Optional[Director] = None,
+                 seed: int = 0, range_mode: bool = True,
+                 probe_duration_s: float = 5.0,
+                 clock: Optional[Clock] = None,
+                 switch_estimate: Optional[dict] = None,
+                 workload: Optional[str] = None,
+                 version: str = "v1.0",
+                 system_id: Optional[str] = None,
+                 software_id: str = "repro-jax"):
+        self.sut = sut
+        self.scenario = scenario
+        self.qsl = qsl or QuerySampleLibrary(64, lambda i: {"idx": i})
+        self.director = director
+        self.seed = seed
+        self.range_mode = range_mode
+        self.probe_duration_s = probe_duration_s
+        self.clock = clock
+        self.switch_estimate = switch_estimate
+        self.workload = workload
+        self.version = version
+        self.system_id = system_id
+        self.software_id = software_id
+
+    def run(self) -> SubmissionResult:
+        outcome = self.scenario.run(self.sut, self.qsl, self.clock)
+        sysdesc = self.sut.system_description()
+        director = self.director or Director(
+            analyzer=analyzer_for_scale(sysdesc.scale, self.seed),
+            seed=self.seed)
+        source = self.sut.power_source(outcome)
+        dur_s = outcome.result.duration_s
+
+        def sut_run(log: MLPerfLogger) -> float:
+            log.run_start(0.0)
+            log.result("samples_processed", outcome.samples_processed,
+                       dur_s * 1e3)
+            log.run_stop(dur_s * 1e3)
+            return dur_s
+
+        perf_log, power_log = director.run_measurement(
+            sut_run=sut_run, power_source=source,
+            range_mode=self.range_mode,
+            probe_duration_s=self.probe_duration_s)
+        summary = summarize(perf_log.events, power_log.events,
+                            switch_estimate=self.switch_estimate)
+        report = review(perf_log.events, power_log.events, sysdesc,
+                        min_duration_s=self.scenario.min_duration_s,
+                        range_mode_used=self.range_mode)
+        submission = efficiency.Submission(
+            version=self.version,
+            workload=self.workload or self.sut.name,
+            scale=sysdesc.scale,
+            system_id=self.system_id or sysdesc.instrument,
+            software_id=self.software_id,
+            samples_per_second=(summary.samples_per_second
+                                or outcome.result.qps),
+            avg_watts=summary.avg_watts)
+
+        per_request = None
+        completed = getattr(self.sut, "completed_requests", lambda: None)()
+        if completed:
+            from repro.serving import attribute_request_energy
+            times_s, watts = _power_samples(power_log)
+            per_request = attribute_request_energy(completed, times_s,
+                                                   watts)
+        return SubmissionResult(outcome, summary, report, submission,
+                                perf_log, power_log, per_request)
+
+
+def _power_samples(power_log: MLPerfLogger
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    pairs = [(ev.time_ms / 1e3, float(ev.value))
+             for ev in power_log.events if ev.key == "power_w"]
+    return (np.asarray([t for t, _ in pairs]),
+            np.asarray([w for _, w in pairs]))

@@ -1,0 +1,300 @@
+"""The SUT (system under test) protocol and adapters.
+
+A ``SUT`` is the one surface the harness measures: how to run queries
+(``issue`` / ``issue_batch`` / ``serve_queue``), what the system draws
+while doing it (``power_source``), and what it claims to be
+(``system_description``).  Adapters wrap the repo's engines behind it:
+
+- ``CallableSUT`` — plain functions + a power model; the universal
+  adapter for analytic workloads and hand-timed jitted calls.
+- ``ServeEngineSUT`` — the fixed-batch ``ServeEngine`` (blocking
+  batches; SingleStream / MultiStream / Offline / sync Server).
+- ``ContinuousBatchingSUT`` — the slot-based
+  ``ContinuousBatchingEngine`` behind ``serve_queue`` (queue-driven
+  Server with per-request TTFT/TPOT and energy attribution).
+- ``TinySUT`` — a pin-demarcated duty-cycled MCU workload (the µW end
+  of the paper's range) with a waveform-shaped power source.
+
+Every adapter supplies a default ``power_source(outcome)`` so a
+``PowerRun`` needs nothing beyond ``PowerRun(sut, scenario).run()``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.compliance import SystemDescription
+from repro.core.power_model import StepWork, SystemPowerModel, TinyPowerModel
+from repro.hw import EDGE_SYSTEM, SystemSpec
+
+PowerSource = Callable[[np.ndarray], np.ndarray]
+
+
+@runtime_checkable
+class SUT(Protocol):
+    """What a measurable system exposes to the harness.
+
+    Scenarios call whichever issue surface they need; adapters may
+    leave the others unimplemented (``NotImplementedError``) and the
+    scenario will say so at run time.
+    """
+
+    name: str
+
+    def issue(self, sample: dict) -> float:
+        """Run one query; return its latency in seconds."""
+        ...
+
+    def issue_batch(self, samples: list[dict]) -> float:
+        """Run one batch/burst; return seconds until all complete."""
+        ...
+
+    def serve_queue(self, arrivals: list[tuple[dict, float]]) -> list:
+        """Serve ``(sample, arrival_s)`` via an admission queue; return
+        completed records (the ``repro.serving.Request`` contract)."""
+        ...
+
+    def power_source(self, outcome) -> PowerSource:
+        """``source(t_s) -> watts`` for the measured run (``outcome``
+        is the ScenarioOutcome, so the trace can be shaped by it)."""
+        ...
+
+    def system_description(self) -> SystemDescription:
+        ...
+
+
+class BaseSUT:
+    """Concrete base: batch falls back to sequential issue, queue is
+    unsupported, power defaults to a constant analytic draw."""
+
+    name = "sut"
+
+    def __init__(self, name: Optional[str] = None,
+                 sysdesc: Optional[SystemDescription] = None):
+        if name is not None:
+            self.name = name
+        self._sysdesc = sysdesc or SystemDescription(
+            scale="edge", max_system_watts=60, idle_system_watts=8)
+
+    def issue(self, sample: dict) -> float:
+        raise NotImplementedError(f"{self.name}: no single-query path")
+
+    def issue_batch(self, samples: list[dict]) -> float:
+        # sequential fallback: the burst finishes when its last sample does
+        return float(sum(self.issue(s) for s in samples))
+
+    def serve_queue(self, arrivals: list[tuple[dict, float]]) -> list:
+        raise NotImplementedError(f"{self.name}: no admission queue")
+
+    def supports_serve_queue(self) -> bool:
+        """Scenario auto-mode probe: does this SUT have a real admission
+        queue?  Overridden by adapters that implement ``serve_queue``."""
+        return False
+
+    def completed_requests(self) -> Optional[list]:
+        """Requests finished by the last run, for per-request energy
+        attribution; ``None`` when the SUT has no request records."""
+        return None
+
+    def power_source(self, outcome) -> PowerSource:
+        raise NotImplementedError(f"{self.name}: no power source")
+
+    def system_description(self) -> SystemDescription:
+        return self._sysdesc
+
+
+def constant_power(watts: float) -> PowerSource:
+    return lambda t: np.full_like(np.asarray(t, float), float(watts))
+
+
+def throughput_watts(meter: SystemPowerModel, cfg, qps: float) -> float:
+    """Analytic full-system draw while serving ``qps`` samples/s of a
+    decoder model: 2 FLOPs/param/sample, weights re-read from HBM at
+    1/8 byte per FLOP (the roofline-fed recipe all adapters share)."""
+    return meter.system_watts(StepWork(
+        flops=2.0 * cfg.param_count() * qps,
+        hbm_bytes=2.0 * cfg.param_count() * qps / 8))
+
+
+class CallableSUT(BaseSUT):
+    """Wrap plain functions + a power figure into a SUT.
+
+    ``power`` is a constant in watts or a ``source(t) -> watts`` trace;
+    use ``power_factory(outcome) -> source`` instead when the trace
+    depends on the run's outcome (throughput-shaped draw, request
+    spans, ...).
+    """
+
+    def __init__(self, *, name: str = "callable-sut",
+                 issue: Optional[Callable[[dict], float]] = None,
+                 issue_batch: Optional[Callable[[list], float]] = None,
+                 serve_queue: Optional[Callable[[list], list]] = None,
+                 power: Any = None,
+                 power_factory: Optional[Callable[[Any], PowerSource]] = None,
+                 sysdesc: Optional[SystemDescription] = None):
+        super().__init__(name, sysdesc)
+        self._issue = issue
+        self._issue_batch = issue_batch
+        self._serve_queue = serve_queue
+        self._power = power
+        self._power_factory = power_factory
+
+    def issue(self, sample: dict) -> float:
+        if self._issue is None:
+            return super().issue(sample)
+        return self._issue(sample)
+
+    def issue_batch(self, samples: list[dict]) -> float:
+        if self._issue_batch is None:
+            return super().issue_batch(samples)
+        return self._issue_batch(samples)
+
+    def serve_queue(self, arrivals: list[tuple[dict, float]]) -> list:
+        if self._serve_queue is None:
+            return super().serve_queue(arrivals)
+        return self._serve_queue(arrivals)
+
+    def supports_serve_queue(self) -> bool:
+        return self._serve_queue is not None
+
+    def power_source(self, outcome) -> PowerSource:
+        if self._power_factory is not None:
+            return self._power_factory(outcome)
+        p = self._power
+        if p is None:
+            return super().power_source(outcome)
+        return p if callable(p) else constant_power(float(p))
+
+
+class ServeEngineSUT(BaseSUT):
+    """Fixed-batch ``ServeEngine`` behind the SUT surface.
+
+    ``make_requests(samples) -> list[Request]`` builds the engine's
+    batch from loadgen samples; latency is real wall time of
+    ``run_batch``.  Power is the analytic system draw at the measured
+    throughput (same shape as the paper's roofline-fed meter).
+    """
+
+    def __init__(self, engine, cfg, *, name: str = "serve-engine",
+                 make_requests: Callable[[list[dict]], list],
+                 system: SystemSpec = EDGE_SYSTEM, n_chips: int = 1,
+                 sysdesc: Optional[SystemDescription] = None):
+        super().__init__(name, sysdesc)
+        self.engine = engine
+        self.cfg = cfg
+        self.make_requests = make_requests
+        self.meter = SystemPowerModel(system, n_chips)
+
+    def issue(self, sample: dict) -> float:
+        return self.issue_batch([sample])
+
+    def issue_batch(self, samples: list[dict]) -> float:
+        reqs = self.make_requests(samples)
+        t0 = time.perf_counter()
+        self.engine.run_batch(reqs)
+        return time.perf_counter() - t0
+
+    def power_source(self, outcome) -> PowerSource:
+        return constant_power(
+            throughput_watts(self.meter, self.cfg, outcome.result.qps))
+
+
+class ContinuousBatchingSUT(BaseSUT):
+    """Slot-based ``ContinuousBatchingEngine`` behind ``serve_queue``.
+
+    ``make_request(i, sample, arrival_s) -> Request`` builds each
+    admission-queue entry.  The power source is shaped by engine
+    occupancy (idle floor + per-slot share of the busy draw over the
+    completed requests' spans), so per-request energy attribution sees
+    a realistic trace.
+    """
+
+    def __init__(self, engine, cfg, *, name: str = "continuous-engine",
+                 make_request: Callable[[int, dict, float], Any],
+                 system: SystemSpec = EDGE_SYSTEM, n_chips: int = 1,
+                 sysdesc: Optional[SystemDescription] = None):
+        super().__init__(name, sysdesc)
+        self.engine = engine
+        self.cfg = cfg
+        self.make_request = make_request
+        self.meter = SystemPowerModel(system, n_chips)
+        self.completed: list = []
+
+    def serve_queue(self, arrivals: list[tuple[dict, float]]) -> list:
+        reqs = [self.make_request(i, s, a)
+                for i, (s, a) in enumerate(arrivals)]
+        self.completed = self.engine.serve(reqs)
+        return self.completed
+
+    def supports_serve_queue(self) -> bool:
+        return True
+
+    def completed_requests(self) -> Optional[list]:
+        return self.completed or None
+
+    def power_source(self, outcome) -> PowerSource:
+        spans = [(r.arrival_s, r.done_s) for r in self.completed
+                 if r.done_s is not None]
+        busy = throughput_watts(self.meter, self.cfg, outcome.result.qps)
+        idle = self.meter.system_watts(None)
+        n_slots = self.engine.n_slots
+
+        def source(t):
+            t = np.asarray(t, float)
+            inflight = np.zeros_like(t)
+            for a, d in spans:
+                inflight += (t >= a) & (t < d)
+            util = np.minimum(inflight / max(1, n_slots), 1.0)
+            return idle + (busy - idle) * util
+
+        return source
+
+
+class TinySUT(BaseSUT):
+    """Duty-cycled MCU workload: an always-on detector running one
+    inference per ``period_s`` frame (pin-demarcated capture, §IV-B).
+
+    ``issue`` runs the real jitted forward but reports the *frame
+    period* as the query latency — the SingleStream run then models
+    wall time of the 4 Hz detector, and the power source replays the
+    MCU waveform (active burst of ``inference_time`` per frame, sleep
+    floor in between) so the summarizer integrates true duty-cycled
+    energy.
+    """
+
+    def __init__(self, fwd: Callable[[], None], *, macs: float,
+                 sram_bytes: float, period_s: float = 0.25,
+                 name: str = "tiny-mcu",
+                 model: Optional[TinyPowerModel] = None,
+                 sysdesc: Optional[SystemDescription] = None):
+        sysdesc = sysdesc or SystemDescription(
+            scale="tiny", instrument="io-manager",
+            max_system_watts=0.01, idle_system_watts=5e-5)
+        super().__init__(name, sysdesc)
+        self.fwd = fwd
+        self.macs = macs
+        self.sram_bytes = sram_bytes
+        self.period_s = period_s
+        self.model = model or TinyPowerModel()
+        self.real_latencies_s: list[float] = []
+
+    def issue(self, sample: dict) -> float:
+        t0 = time.perf_counter()
+        self.fwd()
+        self.real_latencies_s.append(time.perf_counter() - t0)
+        return self.period_s
+
+    def power_source(self, outcome) -> PowerSource:
+        d = self.model.device
+        t_inf = self.model.inference_time(self.macs)
+        p_active = (self.model.inference_energy(self.macs, self.sram_bytes)
+                    / max(t_inf, 1e-9))
+
+        def source(t):
+            t = np.asarray(t, float)
+            active = (t % self.period_s) < t_inf
+            return np.where(active, p_active, d.sleep_watts)
+
+        return source

@@ -1,16 +1,20 @@
 """Serving launcher: ``--arch <id>``, loadgen scenario, Director-
-measured Samples/Joule.
+measured Samples/Joule through the ``repro.harness`` API.
 
-Two engines:
+Two engines, four scenarios, one call path: the engine is wrapped in a
+SUT adapter, the scenario is a config dataclass, and
+``PowerRun(sut, scenario).run()`` does loadgen + Director protocol +
+summarizer + compliance in one shot.
 
-- ``--engine fixed``: the synchronous fixed-batch ``ServeEngine`` —
-  every scenario issues blocking batches, one host sync per token.
-- ``--engine continuous``: the slot-based ``ContinuousBatchingEngine``.
-  Under ``--scenario server`` the Poisson arrival schedule feeds the
-  engine's admission queue asynchronously (``run_server_queue``); the
-  Director samples a utilization-shaped power trace over the run and
-  every request is attributed its share of the measured Joules
-  (TTFT/TPOT/energy per request, tokens/s and tokens/J aggregate).
+- ``--engine fixed``: the synchronous fixed-batch ``ServeEngine``
+  (``ServeEngineSUT``) — single-stream, multi-stream, offline, or the
+  synchronous server form.
+- ``--engine continuous``: the slot-based ``ContinuousBatchingEngine``
+  (``ContinuousBatchingSUT``) under ``--scenario server`` — the
+  Poisson arrival schedule feeds the engine's admission queue
+  asynchronously, the Director samples a utilization-shaped power
+  trace, and every request is attributed its share of the measured
+  Joules (TTFT/TPOT/energy per request, tokens/s and tokens/J).
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
       --reduce --scenario server --engine continuous --qps 8 \
@@ -19,42 +23,37 @@ Two engines:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, list_archs, reduce_config
-from repro.core import (Clock, Director, QuerySampleLibrary, StepWork,
-                        SystemDescription, SystemPowerModel, review,
-                        run_offline, run_server, run_server_queue,
-                        run_single_stream, summarize)
-from repro.hw import EDGE_SYSTEM
+from repro.harness import (ContinuousBatchingSUT, MultiStream, Offline,
+                           PowerRun, ServeEngineSUT, Server, SingleStream)
 from repro.models import build_model
 from repro.models.param import init_params
-from repro.serving import (ContinuousBatchingEngine, Request, ServeEngine,
-                           attribute_request_energy)
+from repro.serving import ContinuousBatchingEngine, Request, ServeEngine
 
 
-def _utilization_power(requests, n_slots, meter, cfg, qps):
-    """Power trace shaped by engine occupancy: idle floor + per-slot
-    share of the busy draw, from the completed requests' spans."""
-    spans = [(r.arrival_s, r.done_s) for r in requests
-             if r.done_s is not None]
-    busy = meter.system_watts(StepWork(
-        flops=2.0 * cfg.param_count() * qps,
-        hbm_bytes=2.0 * cfg.param_count() * qps / 8))
-    idle = meter.system_watts(None)
+def _make_request(key, cfg, i, arrival_s=0.0, new_tokens=8):
+    return Request(
+        rid=i,
+        prompt=jax.random.randint(jax.random.fold_in(key, i), (16,), 0,
+                                  cfg.vocab_size),
+        max_new_tokens=new_tokens, arrival_s=arrival_s)
 
-    def source(t):
-        t = np.asarray(t, float)
-        inflight = np.zeros_like(t)
-        for a, d in spans:
-            inflight += (t >= a) & (t < d)
-        util = np.minimum(inflight / max(1, n_slots), 1.0)
-        return idle + (busy - idle) * util
 
-    return source
+def _scenario_for(args):
+    if args.scenario == "offline":
+        return Offline(batch=args.batch, min_duration_s=args.min_duration)
+    if args.scenario == "server":
+        return Server(target_qps=args.qps, latency_slo_s=10.0,
+                      mode="queue" if args.engine == "continuous"
+                      else "sync", min_duration_s=args.min_duration)
+    if args.scenario == "multi-stream":
+        return MultiStream(n_streams=args.streams,
+                           min_duration_s=args.min_duration)
+    return SingleStream(min_duration_s=args.min_duration)
 
 
 def _serve_continuous(args, cfg, model, params):
@@ -63,81 +62,44 @@ def _serve_continuous(args, cfg, model, params):
         chunk_steps=args.chunk_steps)
     key = jax.random.PRNGKey(1)
 
-    def make_req(i, arrival_s):
-        return Request(
-            rid=i,
-            prompt=jax.random.randint(jax.random.fold_in(key, i),
-                                      (16,), 0, cfg.vocab_size),
-            max_new_tokens=args.new_tokens, arrival_s=arrival_s)
-
     # warmup/compile: one prefill + one chunk outside the measurement
-    engine.serve([make_req(10 ** 6, 0.0)], honor_arrivals=False)
+    engine.serve([_make_request(key, cfg, 10 ** 6,
+                                new_tokens=args.new_tokens)],
+                 honor_arrivals=False)
 
-    done_box = {}
+    sut = ContinuousBatchingSUT(
+        engine, cfg, name=f"{args.arch}-continuous",
+        make_request=lambda i, s, a: _make_request(
+            key, cfg, i, arrival_s=a, new_tokens=args.new_tokens))
+    run = PowerRun(sut, _scenario_for(args), seed=0)
+    r = run.run()
 
-    def serve_fn(arrivals):
-        reqs = [make_req(i, a) for i, (_, a) in enumerate(arrivals)]
-        done = engine.serve(reqs)
-        done_box["reqs"] = done
-        return done
-
-    qsl = QuerySampleLibrary(64, lambda i: {"idx": i})
-    m = run_server_queue(serve_fn, qsl, target_qps=args.qps,
-                         latency_slo_s=10.0,
-                         min_duration_s=args.min_duration)
-    res = m.result
-    print(f"Server[continuous]: {res.n_queries} queries, "
-          f"{res.qps:.2f}/s, {m.tokens_per_s:.1f} tok/s, "
-          f"p99 {res.p99 * 1e3:.1f} ms, SLO met: {m.slo_met}")
+    m = r.outcome.server
+    print(r.render())
     print(f"  TTFT p50/p99: {m.ttft_p(50) * 1e3:.1f}/"
           f"{m.ttft_p(99) * 1e3:.1f} ms, "
-          f"TPOT mean: {np.mean(m.tpot_s) * 1e3:.2f} ms, "
+          f"TPOT mean: {m.tpot_mean * 1e3:.2f} ms, "
           f"host syncs: {engine.host_syncs} "
           f"({m.total_tokens} tokens)")
-
-    # Director-measured energy, attributed per request
-    reqs = done_box["reqs"]
-    meter = SystemPowerModel(EDGE_SYSTEM, 1)
-    source = _utilization_power(reqs, args.slots, meter, cfg, res.qps)
-    d = Director(seed=0)
-
-    def sut_run(log):
-        log.run_start(0.0)
-        log.result("samples_processed", res.n_queries,
-                   res.duration_s * 1e3)
-        log.run_stop(res.duration_s * 1e3)
-        return res.duration_s
-
-    perf_log, power_log = d.run_measurement(sut_run=sut_run,
-                                            power_source=source)
-    s = summarize(perf_log.events, power_log.events)
-    samples = [(ev.time_ms, float(ev.value)) for ev in power_log.events
-               if ev.key == "power_w"]
-    times_s = np.asarray([t for t, _ in samples]) / 1e3
-    watts = np.asarray([w for _, w in samples])
-    per_req = attribute_request_energy(reqs, times_s, watts)
-    e = np.asarray(list(per_req.values()))
-    print(f"{s.energy_j:.1f} J -> {s.samples_per_joule:.4f} samples/J, "
-          f"{m.total_tokens / max(s.energy_j, 1e-9):.3f} tok/J")
+    print(f"  {m.total_tokens / max(r.summary.energy_j, 1e-9):.3f} tok/J")
+    e = np.asarray(list((r.per_request_energy_j or {}).values()))
     if e.size:
         print(f"  per-request energy: mean {e.mean():.2f} J, "
               f"p90 {np.percentile(e, 90):.2f} J")
-    rep = review(perf_log.events, power_log.events,
-                 SystemDescription(scale="edge", max_system_watts=60,
-                                   idle_system_watts=8),
-                 min_duration_s=args.min_duration)
-    print(rep.render())
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
     ap.add_argument("--scenario", default="offline",
-                    choices=["offline", "server", "single-stream"])
+                    choices=["offline", "server", "single-stream",
+                             "multi-stream"])
     ap.add_argument("--engine", default="fixed",
                     choices=["fixed", "continuous"])
     ap.add_argument("--reduce", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--streams", type=int, default=4,
+                    help="samples per MultiStream burst")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--chunk-steps", type=int, default=8)
     ap.add_argument("--qps", type=float, default=4.0)
@@ -146,6 +108,11 @@ def main(argv=None):
     ap.add_argument("--min-duration", type=float, default=60.0)
     args = ap.parse_args(argv)
 
+    if args.engine == "continuous" and args.scenario != "server":
+        ap.error("--engine continuous currently drives the server "
+                 "scenario (its admission queue is the point); use "
+                 "--scenario server")
+
     cfg = get_config(args.arch)
     if args.reduce:
         cfg = reduce_config(cfg)
@@ -153,72 +120,29 @@ def main(argv=None):
     params = init_params(model.param_defs(), jax.random.PRNGKey(0))
 
     if args.engine == "continuous":
-        if args.scenario != "server":
-            ap.error("--engine continuous currently drives the server "
-                     "scenario (its admission queue is the point); use "
-                     "--scenario server")
         _serve_continuous(args, cfg, model, params)
         return
 
+    batch_cap = max(args.batch, args.streams
+                    if args.scenario == "multi-stream" else 1)
     engine = ServeEngine(model, params, max_len=args.max_len,
-                         batch_size=args.batch)
+                         batch_size=batch_cap)
     key = jax.random.PRNGKey(1)
 
-    def make_reqs(i):
-        return [Request(rid=i + j,
-                        prompt=jax.random.randint(
-                            jax.random.fold_in(key, i + j), (16,), 0,
-                            cfg.vocab_size),
-                        max_new_tokens=args.new_tokens)
-                for j in range(args.batch)]
+    def make_requests(samples):
+        return [_make_request(key, cfg, s["idx"],
+                              new_tokens=args.new_tokens)
+                for s in samples]
 
-    engine.run_batch(make_reqs(0))             # compile
-    def issue_batch(samples):
-        t0 = time.perf_counter()
-        engine.run_batch(make_reqs(samples[0]["idx"]))
-        return time.perf_counter() - t0
-
-    qsl = QuerySampleLibrary(64, lambda i: {"idx": i})
-    if args.scenario == "offline":
-        res = run_offline(issue_batch, qsl, batch=args.batch, clock=Clock(),
-                          min_duration_s=args.min_duration)
-        slo = None
-    elif args.scenario == "server":
-        res, slo = run_server(lambda s: issue_batch([s]) / args.batch, qsl,
-                              target_qps=args.qps, latency_slo_s=10.0,
-                              clock=Clock(),
-                              min_duration_s=args.min_duration)
-    else:
-        res = run_single_stream(lambda s: issue_batch([s]), qsl,
-                                clock=Clock(),
-                                min_duration_s=args.min_duration)
-        slo = None
-    print(f"{res.scenario}: {res.n_queries} queries, {res.qps:.2f}/s, "
-          f"p90 {res.p90 * 1e3:.1f} ms" +
-          (f", SLO met: {slo}" if slo is not None else ""))
-
-    meter = SystemPowerModel(EDGE_SYSTEM, 1)
-    watts = meter.system_watts(StepWork(
-        flops=2.0 * cfg.param_count() * res.qps,
-        hbm_bytes=2.0 * cfg.param_count() * res.qps / 8))
-    d = Director(seed=0)
-
-    def sut_run(log):
-        log.run_start(0.0)
-        log.result("samples_processed", res.n_queries,
-                   res.duration_s * 1e3)
-        log.run_stop(res.duration_s * 1e3)
-        return res.duration_s
-
-    pl_, pw = d.run_measurement(
-        sut_run=sut_run, power_source=lambda t: np.full_like(t, watts))
-    s = summarize(pl_.events, pw.events)
-    print(f"{s.energy_j:.1f} J -> {s.samples_per_joule:.4f} samples/J")
-    rep = review(pl_.events, pw.events,
-                 SystemDescription(scale="edge", max_system_watts=60,
-                                   idle_system_watts=8),
-                 min_duration_s=args.min_duration)
-    print(rep.render())
+    # warm the jit cache with the batch shape the scenario will issue
+    # (run_batch compiles per batch size)
+    warm_n = {"offline": args.batch,
+              "multi-stream": args.streams}.get(args.scenario, 1)
+    engine.run_batch(make_requests([{"idx": j} for j in range(warm_n)]))
+    sut = ServeEngineSUT(engine, cfg, name=f"{args.arch}-fixed",
+                         make_requests=make_requests)
+    r = PowerRun(sut, _scenario_for(args), seed=0).run()
+    print(r.render())
 
 
 if __name__ == "__main__":
