@@ -11,8 +11,7 @@ import json
 import os
 
 from repro.core.power_model import StepWork, SystemPowerModel, roofline
-from repro.hw import DATACENTER_V5E, SYSTEMS, SystemSpec
-from repro.launch.roofline import model_flops_for
+from repro.hw import DATACENTER_V5E, SystemSpec
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")

@@ -4,7 +4,7 @@ history (baseline -> perf iterations), per hillclimbed workload, plus
 the tiny/edge quantization step, mirroring the per-category trends."""
 from __future__ import annotations
 
-from benchmarks.common import all_cells, cell_energy, csv_row
+from benchmarks.common import all_cells, csv_row
 from benchmarks.sw_hw_optimizations import PERF_TAGS, _submission
 from repro.core.efficiency import normalized_trend
 

@@ -5,7 +5,7 @@ J/token for decode, plus the tiny workload — reproducing the paper's
 5-orders-of-magnitude span between tiny CV and datacenter LLMs."""
 from __future__ import annotations
 
-from benchmarks.common import (all_cells, cell_energy, csv_row, load_cell,
+from benchmarks.common import (cell_energy, csv_row, load_cell,
                                samples_per_step)
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.core.power_model import TinyPowerModel

@@ -9,7 +9,7 @@ from benchmarks.common import cell_energy, csv_row, load_cell
 from repro.configs import get_config
 from repro.core.power_model import (StepWork, SystemPowerModel,
                                     TinyPowerModel)
-from repro.hw import DATACENTER_V5E, EDGE_SYSTEM
+from repro.hw import EDGE_SYSTEM
 from repro.models import tiny as tiny_mod
 
 

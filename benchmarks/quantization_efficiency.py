@@ -9,9 +9,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import cell_energy, csv_row, load_cell
+from benchmarks.common import csv_row, load_cell
 from repro.core.power_model import StepWork, SystemPowerModel, roofline
 from repro.hw import DATACENTER_V5E
 

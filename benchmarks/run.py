@@ -23,8 +23,9 @@ def main(argv=None) -> None:
     from benchmarks import (accuracy_cost, efficiency_trends,
                             energy_per_inference, power_range,
                             quantization_efficiency, roofline_table,
-                            scaling_energy, serving_throughput,
-                            sw_hw_optimizations, tiny_edge_measured)
+                            scale_sweep, scaling_energy,
+                            serving_throughput, sw_hw_optimizations,
+                            tiny_edge_measured)
 
     modules = [
         ("fig2_power_range", power_range),
@@ -37,24 +38,32 @@ def main(argv=None) -> None:
         ("roofline_table", roofline_table),
         ("measured_tiny_edge", tiny_edge_measured),
         ("serving_throughput", serving_throughput),
+        ("scale_sweep", scale_sweep),
     ]
     print("name,us_per_call,derived")
-    failures = 0
+    n_rows = 0
+    n_error = 0
     for name, mod in modules:
         try:
             kw = {}
             if args.smoke and \
                     "smoke" in inspect.signature(mod.csv).parameters:
                 kw["smoke"] = True
-            for row in mod.csv(**kw):
-                print(row)
+            rows = list(mod.csv(**kw))
         except Exception as e:  # noqa: BLE001 — report all benches
-            failures += 1
             # which exception class fired goes into the derived column
             # (CSV stays 3 columns); the traceback goes to stderr
-            print(f"{name},0.0,ERROR:{type(e).__name__}", file=sys.stdout)
+            rows = [f"{name},0.0,ERROR:{type(e).__name__}"]
             traceback.print_exc(file=sys.stderr)
-    if failures:
+        for row in rows:
+            print(row)
+            n_rows += 1
+            # a module may also *emit* ERROR rows instead of raising;
+            # both forms must fail the gate, not just the exceptions
+            if row.split(",", 2)[-1].startswith("ERROR"):
+                n_error += 1
+    print(f"# summary: {n_rows} rows, {n_error} ERROR")
+    if n_error:
         raise SystemExit(1)
 
 

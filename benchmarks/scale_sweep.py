@@ -1,0 +1,182 @@
+"""Scale sweep: perf-vs-watts across {1 device, TP=k, R replicas}.
+
+The paper's core claim is that energy efficiency must be measured
+*across scales*; this sweep walks the serving stack up the datacenter
+end of the µW->MW axis and reports tokens/s and tokens/J at each scale
+point, all through the same ``PowerRun`` methodology:
+
+- ``tp1``   — one ``ContinuousBatchingEngine`` on one device;
+- ``tpK``   — one ``ShardedContinuousBatchingEngine`` over a K-way
+  tensor-parallel mesh (``ShardedSUT``: meter spans K chips);
+- ``r2``    — two independent engines behind one admission queue
+  (``ReplicatedSUT``: fleet power is the sum of the replica traces).
+
+On CPU CI run under 4 virtual host devices::
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m benchmarks.scale_sweep --smoke
+
+With a single device the TP point degrades to ``tp1`` only (the CI
+sharded smoke stage supplies the virtual mesh).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+SLOTS = 4
+PROMPT_LEN = 12
+MAX_LEN = 48
+MIX = (4, 12, 6, 8)  # mixed decode budgets: stragglers + short ones
+QPS = 200.0  # saturating offered load: every point runs backlogged
+REPLICAS = 2
+
+
+def _make_request(cfg, rid, arrival_s):
+    import jax
+
+    from repro.serving import Request
+
+    key = jax.random.PRNGKey(11)
+    return Request(
+        rid=rid,
+        prompt=np.asarray(
+            jax.random.randint(
+                jax.random.fold_in(key, rid), (PROMPT_LEN,), 0, cfg.vocab_size
+            )
+        ),
+        max_new_tokens=MIX[rid % len(MIX)],
+        arrival_s=float(arrival_s),
+    )
+
+
+def _warm(engine, cfg):
+    engine.serve(
+        [_make_request(cfg, 10**6, 0.0)], honor_arrivals=False
+    )
+
+
+def _run_point(name, sut, n_queries, chips):
+    from repro.core.analyzer import AnalyzerSpec, VirtualAnalyzer
+    from repro.core.director import Director
+    from repro.harness import PowerRun, Server
+
+    scenario = Server(
+        target_qps=QPS,
+        latency_slo_s=30.0,
+        min_duration_s=0.0,
+        min_queries=n_queries,
+        mode="queue",
+    )
+    # sub-second smoke runs: sample at 1 kHz so the energy window
+    # resolves each point's actual duration
+    director = Director(
+        analyzer=VirtualAnalyzer(AnalyzerSpec(sample_hz=1000.0), seed=0),
+        seed=0,
+    )
+    r = PowerRun(sut, scenario, seed=0, director=director).run()
+    m = r.outcome.server
+    tok_j = m.total_tokens / max(r.summary.energy_j, 1e-12)
+    us_per_tok = r.outcome.result.duration_s / max(1, m.total_tokens) * 1e6
+    return (
+        f"scale_{name},{us_per_tok:.1f},"
+        f"{m.tokens_per_s:.1f}toks/s;{tok_j:.4f}tok/J;"
+        f"{r.summary.avg_watts:.1f}W;{chips}chips"
+    ), m.tokens_per_s, tok_j
+
+
+def csv(smoke: bool = False) -> list[str]:
+    import jax
+
+    from repro.configs import get_config, reduce_config
+    from repro.harness import ContinuousBatchingSUT, ReplicatedSUT, ShardedSUT
+    from repro.models import build_model
+    from repro.models.param import init_params
+    from repro.serving import (
+        ContinuousBatchingEngine,
+        ShardedContinuousBatchingEngine,
+    )
+
+    n_dev = len(jax.devices())
+    if smoke and n_dev == 1:
+        # the tier-1 gate's dedicated sharded-smoke stage runs this
+        # sweep on a 4-device virtual mesh; don't pay for the degraded
+        # single-device points twice per gate run
+        return [
+            "scale_sweep_skipped,0.0,single-device-smoke;covered-by-"
+            "sharded-smoke-stage (XLA_FLAGS="
+            "--xla_force_host_platform_device_count=4)"
+        ]
+
+    cfg = reduce_config(get_config("qwen3-1.7b"))
+    model = build_model(cfg)
+    params = init_params(model.param_defs(), jax.random.PRNGKey(0))
+    n = 8 if smoke else 24
+
+    def make_request(i, s, a):
+        from repro.core.loadgen import qid_of
+
+        # rid from the loadgen query id: replicas each see a share of
+        # the queue and attribution needs fleet-unique ids
+        return _make_request(cfg, qid_of(s, i), a)
+
+    rows = []
+
+    # -- 1 device ------------------------------------------------------
+    eng1 = ContinuousBatchingEngine(
+        model, params, max_len=MAX_LEN, n_slots=SLOTS, chunk_steps=4
+    )
+    _warm(eng1, cfg)
+    sut1 = ContinuousBatchingSUT(
+        eng1, cfg, name="scale-tp1", make_request=make_request
+    )
+    row, base_tps, _ = _run_point("tp1", sut1, n, chips=1)
+    rows.append(row)
+
+    # -- tensor parallel over every available device -------------------
+    if n_dev > 1:
+        eng_tp = ShardedContinuousBatchingEngine(
+            model, params, tp=n_dev, max_len=MAX_LEN, n_slots=SLOTS,
+            chunk_steps=4,
+        )
+        _warm(eng_tp, cfg)
+        sut_tp = ShardedSUT(
+            eng_tp, cfg, name=f"scale-tp{n_dev}", make_request=make_request
+        )
+        row, _, _ = _run_point(f"tp{n_dev}", sut_tp, n, chips=n_dev)
+        rows.append(row)
+    else:
+        rows.append(
+            "scale_tp_skipped,0.0,single-device;set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=4"
+        )
+
+    # -- replica fleet -------------------------------------------------
+    reps = []
+    for _ in range(REPLICAS):
+        eng = ContinuousBatchingEngine(
+            model, params, max_len=MAX_LEN, n_slots=SLOTS, chunk_steps=4
+        )
+        _warm(eng, cfg)
+        reps.append(
+            ContinuousBatchingSUT(
+                eng, cfg, name="scale-replica", make_request=make_request
+            )
+        )
+    fleet = ReplicatedSUT(reps, name=f"scale-r{REPLICAS}")
+    row, fleet_tps, _ = _run_point(f"r{REPLICAS}", fleet, n, chips=REPLICAS)
+    rows.append(row)
+    rows.append(
+        f"scale_r{REPLICAS}_speedup,0.0,{fleet_tps / max(base_tps, 1e-9):.2f}x"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    for r in csv(smoke=args.smoke):
+        print(r)

@@ -28,8 +28,6 @@ MESHES = [(4, 16), (16, 16), (32, 16)]  # 64/256/512 chips
 
 def compile_points():
     """Compile the scaling cells (needs the 512-device env)."""
-    import dataclasses
-
     from repro.configs import SHAPES, get_config
     from repro.launch.calibrate import calibrated_costs
     from repro.launch.mesh import make_mesh

@@ -8,7 +8,6 @@ a compliance review.
   PYTHONPATH=src python examples/train_e2e.py --steps 12 --smoke
 """
 import argparse
-import os
 import time
 
 import jax

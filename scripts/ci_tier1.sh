@@ -1,14 +1,36 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: the full test suite plus the benchmark smoke sweep
-# and a harness smoke through the public repro.harness API.
-# Mirrors ROADMAP.md's "Tier-1 verify" command; run from the repo root.
+# Tier-1 CI gate: full test suite + benchmark smoke + harness smoke +
+# sharded (virtual-mesh) smoke.  Mirrors ROADMAP.md's "Tier-1 verify"
+# command; run from the repo root.  Each stage prints wall-time banners
+# so a gate failure localizes to a stage in the CI log.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
-python -m benchmarks.run --smoke
-# harness smoke: one PowerRun end to end (SUT -> scenario -> Director ->
-# summarizer -> compliance); fails the gate on any public-API regression
-python -m examples.tiny_benchmark
+stage() {
+    local name="$1"; shift
+    local t0
+    t0=$(date +%s)
+    echo "===== [tier1] stage: ${name} ====="
+    "$@"
+    echo "===== [tier1] stage: ${name} OK ($(( $(date +%s) - t0 ))s) ====="
+}
+
+# 1. full test suite (pytest reads PYTEST_ADDOPTS from the environment,
+#    so CI can add --junitxml/--durations without changing this script)
+stage tests python -m pytest -q
+
+# 2. benchmark smoke sweep; exits non-zero if any row is ERROR
+stage bench-smoke python -m benchmarks.run --smoke
+
+# 3. harness smoke: one PowerRun end to end (SUT -> scenario ->
+#    Director -> summarizer -> compliance); fails the gate on any
+#    public-API regression
+stage harness-smoke python -m examples.tiny_benchmark
+
+# 4. sharded smoke: the scale sweep on a 4-device virtual mesh —
+#    TP=1 vs TP=4 parity and replica energy accounting without hardware
+stage sharded-smoke env \
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m benchmarks.scale_sweep --smoke

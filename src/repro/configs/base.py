@@ -8,7 +8,7 @@ package; ``repro.configs.get_config(name)`` is the registry entry point.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

@@ -247,6 +247,16 @@ class ServerMetrics:
         return float(np.mean(self.tpot_s))
 
 
+def qid_of(sample, fallback: int) -> int:
+    """The loadgen-assigned unique query id of a sample, else the
+    caller's enumerate index.  Request builders must use this (not the
+    bare index) for request ids: samples wrap modulo the QSL size and
+    replicas each enumerate only their share of the queue."""
+    if isinstance(sample, dict) and "qid" in sample:
+        return sample["qid"]
+    return fallback
+
+
 def run_server_queue(serve: Callable[[list[tuple[dict, float]]], list],
                      qsl: QuerySampleLibrary, *, target_qps: float,
                      latency_slo_s: float,
@@ -263,10 +273,16 @@ def run_server_queue(serve: Callable[[list[tuple[dict, float]]], list],
     ``repro.serving.Request`` contract).  Unlike ``run_server``, the
     SUT is free to overlap requests (continuous batching), so the
     latency distribution reflects real queueing + mid-flight admission.
+
+    Each sample dict carries a ``qid`` — the loadgen-assigned unique
+    query id.  QSL samples wrap modulo the library size (the
+    performance sample set), so ``qid``, not the sample index, is what
+    request builders must use for request ids: it stays unique when the
+    schedule outruns the QSL and when replicas split one queue.
     """
     arrivals = poisson_arrivals(target_qps, min_duration_s=min_duration_s,
                                 seed=seed, min_queries=min_queries)
-    recs = serve([(qsl.sample(i), float(a))
+    recs = serve([(dict(qsl.sample(i), qid=i), float(a))
                   for i, a in enumerate(arrivals)])
     lat = np.asarray([r.done_s - r.arrival_s for r in recs])
     ttft = np.asarray([r.first_token_s - r.arrival_s for r in recs])

@@ -17,7 +17,6 @@ tiny scale uses the MAC-level MCU model with sleep between inferences.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 import numpy as np

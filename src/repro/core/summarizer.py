@@ -17,7 +17,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.mlperf_log import LogEvent, MLPerfLogger, find_window
+from repro.core.mlperf_log import LogEvent, find_window
 
 
 def _trapz(y: np.ndarray, x: np.ndarray) -> float:

@@ -12,7 +12,7 @@ boundaries) so the training examples exercise a real batching path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp

@@ -20,8 +20,9 @@ when the SUT keeps request records).
     print(res.render())
 """
 from repro.harness.sut import (  # noqa: F401
-    SUT, BaseSUT, CallableSUT, ContinuousBatchingSUT, ServeEngineSUT,
-    TinySUT, constant_power, throughput_watts,
+    SUT, BaseSUT, CallableSUT, ContinuousBatchingSUT, ReplicatedSUT,
+    ServeEngineSUT, ShardedSUT, TinySUT, constant_power,
+    throughput_watts,
 )
 from repro.harness.scenarios import (  # noqa: F401
     SCENARIOS, MultiStream, Offline, Scenario, ScenarioOutcome, Server,

@@ -12,6 +12,14 @@ while doing it (``power_source``), and what it claims to be
 - ``ContinuousBatchingSUT`` — the slot-based
   ``ContinuousBatchingEngine`` behind ``serve_queue`` (queue-driven
   Server with per-request TTFT/TPOT and energy attribution).
+- ``ShardedSUT`` — the tensor-parallel
+  ``ShardedContinuousBatchingEngine``: same queue surface, with the
+  power meter and system description scaled to the ``tp`` chips of the
+  mesh (the datacenter rows of the paper's µW->MW table).
+- ``ReplicatedSUT`` — N independent engine replicas behind one
+  admission queue: arrivals dispatched round-robin, fleet power is the
+  sum of the replicas' traces, and per-replica energy attribution is
+  exposed for scale accounting.
 - ``TinySUT`` — a pin-demarcated duty-cycled MCU workload (the µW end
   of the paper's range) with a waveform-shaped power source.
 
@@ -250,6 +258,161 @@ class ContinuousBatchingSUT(BaseSUT):
             return idle + (busy - idle) * util
 
         return source
+
+
+def _system_peak_watts(meter: SystemPowerModel) -> float:
+    """Declared full-system envelope: every chip at peak + active hosts
+    + switches, through the PSU (the ``max_system_watts`` a submission
+    at this scale would state)."""
+    s = meter.system
+    w = (meter.n_chips * s.chip.peak_watts
+         + s.n_hosts(meter.n_chips) * s.host_active_watts
+         + s.n_switches(meter.n_chips) * s.switch_watts)
+    return w / s.psu_efficiency
+
+
+class ShardedSUT(ContinuousBatchingSUT):
+    """Tensor-parallel ``ShardedContinuousBatchingEngine`` behind the
+    SUT surface.
+
+    Identical queue semantics to ``ContinuousBatchingSUT``; the power
+    meter spans the mesh (``n_chips = engine.tp``) and the default
+    system description declares the matching scale and envelope, so
+    ``PowerRun`` picks the scale-appropriate analyzer and the
+    compliance review checks the fleet-level power budget.
+    """
+
+    def __init__(self, engine, cfg, *, name: str = "sharded-engine",
+                 make_request: Callable[[int, dict, float], Any],
+                 system: SystemSpec = EDGE_SYSTEM,
+                 scale: Optional[str] = None,
+                 sysdesc: Optional[SystemDescription] = None):
+        tp = engine.tp
+        meter = SystemPowerModel(system, tp)
+        if sysdesc is None:
+            scale = scale or ("datacenter" if tp > 1 else "edge")
+            # datacenter submissions document node telemetry accuracy
+            # (R4) instead of a SPEC-approved analyzer
+            telemetry = 0.01 if scale == "datacenter" else None
+            sysdesc = SystemDescription(
+                scale=scale, n_chips=tp,
+                instrument=("node-telemetry" if scale == "datacenter"
+                            else "virtual-wt310"),
+                telemetry_accuracy=telemetry,
+                max_system_watts=_system_peak_watts(meter),
+                idle_system_watts=meter.system_watts(None))
+        super().__init__(engine, cfg, name=name,
+                         make_request=make_request, system=system,
+                         n_chips=tp, sysdesc=sysdesc)
+
+
+class ReplicatedSUT(BaseSUT):
+    """N independent engine replicas behind one admission queue.
+
+    ``replicas`` are queue-capable SUTs (``ContinuousBatchingSUT`` /
+    ``ShardedSUT``); one admission queue dispatches arrivals
+    round-robin, each replica serves its share on the shared t=0
+    clock, and the completed records merge into one fleet result.
+    The fleet power source is the *sum* of the replicas' own shaped
+    traces (each sees only its requests' spans), so the summarizer
+    integrates true fleet energy and ``replica_energy_j`` splits it
+    back per replica — the attribution test checks the parts sum to
+    the whole.
+    """
+
+    def __init__(self, replicas: list, *, name: str = "replicated",
+                 sysdesc: Optional[SystemDescription] = None):
+        if not replicas:
+            raise ValueError("ReplicatedSUT needs at least one replica")
+        base = replicas[0].system_description()
+        r = len(replicas)
+        if sysdesc is None:
+            sysdesc = SystemDescription(
+                scale=base.scale, n_chips=base.n_chips * r,
+                instrument=base.instrument,
+                telemetry_accuracy=base.telemetry_accuracy,
+                max_system_watts=(base.max_system_watts or 0.0) * r or None,
+                idle_system_watts=base.idle_system_watts * r)
+        super().__init__(name, sysdesc)
+        self.replicas = replicas
+        self.completed: list = []
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
+
+    def serve_queue(self, arrivals: list[tuple[dict, float]]) -> list:
+        from concurrent.futures import ThreadPoolExecutor
+
+        shares = [arrivals[i::self.n_replicas]
+                  for i in range(self.n_replicas)]
+        self.completed = []
+        # replicas are independent engines on independent t=0 clocks;
+        # serve them concurrently so fleet wall time is one schedule,
+        # not R of them (each replica sleeps through its own arrivals).
+        # Every replica serves even an empty share so its completed
+        # list reflects *this* run (no stale spans in the fleet power
+        # trace when the SUT is reused or under-fed).
+        with ThreadPoolExecutor(self.n_replicas) as pool:
+            futures = [pool.submit(rep.serve_queue, share)
+                       for rep, share in zip(self.replicas, shares)]
+            for f in futures:
+                self.completed.extend(f.result())
+        rids = [r.rid for r in self.completed]
+        if len(set(rids)) != len(rids):
+            raise ValueError(
+                f"{self.name}: duplicate request ids across replicas — "
+                "request builders must derive rids from the loadgen "
+                "query id (repro.core.loadgen.qid_of), not the "
+                "per-replica enumerate index")
+        return self.completed
+
+    def supports_serve_queue(self) -> bool:
+        return True
+
+    def completed_requests(self) -> Optional[list]:
+        return self.completed or None
+
+    def _replica_outcome(self, rep, outcome):
+        """The fleet outcome as one replica sees it: the real outcome
+        with qps scaled to its share of completed queries, every other
+        field intact (replica power sources may read any of them)."""
+        import dataclasses
+
+        frac = (len(rep.completed) / max(1, len(self.completed))
+                if getattr(rep, "completed", None) else 0.0)
+        result = dataclasses.replace(outcome.result,
+                                     qps=outcome.result.qps * frac)
+        return dataclasses.replace(outcome, result=result)
+
+    def replica_sources(self, outcome) -> list[PowerSource]:
+        return [rep.power_source(self._replica_outcome(rep, outcome))
+                for rep in self.replicas]
+
+    def power_source(self, outcome) -> PowerSource:
+        sources = self.replica_sources(outcome)
+
+        def fleet(t):
+            t = np.asarray(t, float)
+            total = np.zeros_like(t)
+            for src in sources:
+                total = total + np.asarray(src(t), float)
+            return total
+
+        return fleet
+
+    def replica_energy_j(self, outcome, times_s: np.ndarray
+                         ) -> list[float]:
+        """Trapezoidal per-replica energy over the measured sample
+        times; sums to the fleet trace's integral by linearity."""
+        times_s = np.asarray(times_s, float)
+        from repro.core.summarizer import _trapz
+
+        out = []
+        for src in self.replica_sources(outcome):
+            w = np.asarray(src(times_s), float)
+            out.append(float(_trapz(w, times_s)))
+        return out
 
 
 class TinySUT(BaseSUT):

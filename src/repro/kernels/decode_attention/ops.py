@@ -2,10 +2,18 @@
 
 Accepts a per-sequence ``pos`` vector (ragged continuous-batching
 decode) or a scalar (fixed batch, all rows at the same depth).
+
+Shard-aware: the grid and block specs are derived from the shapes the
+wrapper actually sees, so calling it inside ``shard_map`` with a
+KV-head-partitioned cache (tensor-parallel serving) tiles each shard's
+``B * KVH_local`` rows independently — ragged multi-slot decode stays
+one fused kernel call per shard.  Leave ``block_k`` unset to auto-fit
+the KV block to the (shard-local) cache length.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,14 +23,26 @@ from repro.kernels.decode_attention.decode_attention import (
 )
 
 
+def fit_block_k(s: int, block_k: Optional[int] = None,
+                max_block: int = 512) -> int:
+    """KV block size for a (shard-local) cache of length ``s``: the
+    requested size, else ``max_block`` clamped down to one lane-aligned
+    block when the whole cache fits in less."""
+    if block_k is not None:
+        return block_k
+    return min(max_block, -(-s // 128) * 128)
+
+
 @partial(jax.jit, static_argnames=("block_k", "interpret"))
-def decode_attention(q, k_cache, v_cache, pos, *, block_k: int = 512,
+def decode_attention(q, k_cache, v_cache, pos, *,
+                     block_k: Optional[int] = None,
                      interpret: bool = False):
     """q: (B, 1, H, D); caches: (B, S, KVH, D); pos: () or (B,) int32.
     Returns (B, 1, H, D)."""
     b, _, h, d = q.shape
     s, kvh = k_cache.shape[1], k_cache.shape[2]
     g = h // kvh
+    block_k = fit_block_k(s, block_k)
     qr = q[:, 0].reshape(b, kvh, g, d).reshape(b * kvh, g, d)
     kr = k_cache.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
     vr = v_cache.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)

@@ -15,7 +15,6 @@ shape-identical, so the model is exact, not a regression.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 from repro.configs.base import ModelConfig, ShapeConfig
 

@@ -23,8 +23,6 @@ import json
 import time
 import traceback
 
-import jax
-
 from repro.configs import (ASSIGNED_ARCHS, SHAPES, get_config,
                            shape_applicable)
 from repro.launch.mesh import make_production_mesh

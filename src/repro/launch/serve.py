@@ -19,6 +19,18 @@ summarizer + compliance in one shot.
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
       --reduce --scenario server --engine continuous --qps 8 \
       --min-duration 2
+
+Scale axis (the paper's µW -> MW sweep): ``--tp K`` shards the
+continuous engine over a K-way tensor-parallel mesh
+(``ShardedContinuousBatchingEngine`` + ``ShardedSUT``), ``--replicas R``
+runs R independent engines behind one admission queue
+(``ReplicatedSUT``; fleet power = sum of replica traces).  Without
+accelerators, run on virtual host devices:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+      --reduce --scenario server --engine continuous --tp 4 \
+      --qps 8 --min-duration 2
 """
 from __future__ import annotations
 
@@ -28,11 +40,14 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, list_archs, reduce_config
+from repro.core.loadgen import qid_of
 from repro.harness import (ContinuousBatchingSUT, MultiStream, Offline,
-                           PowerRun, ServeEngineSUT, Server, SingleStream)
+                           PowerRun, ReplicatedSUT, ServeEngineSUT,
+                           Server, ShardedSUT, SingleStream)
 from repro.models import build_model
 from repro.models.param import init_params
-from repro.serving import ContinuousBatchingEngine, Request, ServeEngine
+from repro.serving import (ContinuousBatchingEngine, Request, ServeEngine,
+                           ShardedContinuousBatchingEngine)
 
 
 def _make_request(key, cfg, i, arrival_s=0.0, new_tokens=8):
@@ -56,21 +71,47 @@ def _scenario_for(args):
     return SingleStream(min_duration_s=args.min_duration)
 
 
-def _serve_continuous(args, cfg, model, params):
-    engine = ContinuousBatchingEngine(
+def _build_continuous_engine(args, model, params):
+    if args.tp > 1:
+        return ShardedContinuousBatchingEngine(
+            model, params, tp=args.tp, max_len=args.max_len,
+            n_slots=args.slots, chunk_steps=args.chunk_steps)
+    return ContinuousBatchingEngine(
         model, params, max_len=args.max_len, n_slots=args.slots,
         chunk_steps=args.chunk_steps)
+
+
+def _serve_continuous(args, cfg, model, params):
     key = jax.random.PRNGKey(1)
 
-    # warmup/compile: one prefill + one chunk outside the measurement
-    engine.serve([_make_request(key, cfg, 10 ** 6,
-                                new_tokens=args.new_tokens)],
-                 honor_arrivals=False)
+    def make_request(i, s, a):
+        # rid from the loadgen query id, not the per-replica enumerate
+        # index: replicas each see a share of the queue, and energy
+        # attribution needs fleet-unique request ids
+        return _make_request(key, cfg, qid_of(s, i), arrival_s=a,
+                             new_tokens=args.new_tokens)
 
-    sut = ContinuousBatchingSUT(
-        engine, cfg, name=f"{args.arch}-continuous",
-        make_request=lambda i, s, a: _make_request(
-            key, cfg, i, arrival_s=a, new_tokens=args.new_tokens))
+    def one_sut(idx):
+        engine = _build_continuous_engine(args, model, params)
+        # warmup/compile: one prefill + one chunk outside the measurement
+        engine.serve([_make_request(key, cfg, 10 ** 6,
+                                    new_tokens=args.new_tokens)],
+                     honor_arrivals=False)
+        name = f"{args.arch}-continuous" + (
+            f"-r{idx}" if args.replicas > 1 else "")
+        if args.tp > 1:
+            return ShardedSUT(engine, cfg, name=f"{name}-tp{args.tp}",
+                              make_request=make_request), engine
+        return ContinuousBatchingSUT(engine, cfg, name=name,
+                                     make_request=make_request), engine
+
+    pairs = [one_sut(i) for i in range(args.replicas)]
+    engines = [e for _, e in pairs]
+    if args.replicas > 1:
+        sut = ReplicatedSUT([s for s, _ in pairs],
+                            name=f"{args.arch}-x{args.replicas}")
+    else:
+        sut = pairs[0][0]
     run = PowerRun(sut, _scenario_for(args), seed=0)
     r = run.run()
 
@@ -79,13 +120,22 @@ def _serve_continuous(args, cfg, model, params):
     print(f"  TTFT p50/p99: {m.ttft_p(50) * 1e3:.1f}/"
           f"{m.ttft_p(99) * 1e3:.1f} ms, "
           f"TPOT mean: {m.tpot_mean * 1e3:.2f} ms, "
-          f"host syncs: {engine.host_syncs} "
+          f"host syncs: {sum(e.host_syncs for e in engines)} "
           f"({m.total_tokens} tokens)")
-    print(f"  {m.total_tokens / max(r.summary.energy_j, 1e-9):.3f} tok/J")
+    print(f"  {m.total_tokens / max(r.summary.energy_j, 1e-9):.3f} tok/J"
+          + (f" across tp={args.tp}" if args.tp > 1 else "")
+          + (f" x {args.replicas} replicas" if args.replicas > 1 else ""))
     e = np.asarray(list((r.per_request_energy_j or {}).values()))
     if e.size:
         print(f"  per-request energy: mean {e.mean():.2f} J, "
               f"p90 {np.percentile(e, 90):.2f} J")
+    if args.replicas > 1:
+        times_s, _ = r.power_samples()
+        per_rep = sut.replica_energy_j(r.outcome, times_s)
+        split = "/".join(f"{x:.2f}" for x in per_rep)
+        print(f"  per-replica energy: {split} J "
+              f"(sum {sum(per_rep):.2f} J vs fleet "
+              f"{r.summary.energy_j:.2f} J)")
 
 
 def main(argv=None):
@@ -102,6 +152,12 @@ def main(argv=None):
                     help="samples per MultiStream burst")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--chunk-steps", type=int, default=8)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree (sharded engine; needs "
+                         "tp devices — virtual on CPU via XLA_FLAGS)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="independent engine replicas behind one "
+                         "admission queue (fleet power summed)")
     ap.add_argument("--qps", type=float, default=4.0)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=8)
@@ -112,6 +168,9 @@ def main(argv=None):
         ap.error("--engine continuous currently drives the server "
                  "scenario (its admission queue is the point); use "
                  "--scenario server")
+    if (args.tp > 1 or args.replicas > 1) and args.engine != "continuous":
+        ap.error("--tp/--replicas shard the continuous engine; add "
+                 "--engine continuous")
 
     cfg = get_config(args.arch)
     if args.reduce:

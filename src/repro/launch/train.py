@@ -13,14 +13,13 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager, run_with_recovery
 from repro.configs import get_config, list_archs, reduce_config
 from repro.core import (MLPerfLogger, StepWork, SwitchEstimator,
-                        SystemDescription, SystemPowerModel, review)
+                        SystemPowerModel)
 from repro.core.summarizer import energy_to_train
-from repro.data import SyntheticTokens, batch_for_shape
+from repro.data import SyntheticTokens
 from repro.hw import DATACENTER_V5E
 from repro.models import build_model
 from repro.parallel.sharding import make_rules

@@ -143,7 +143,8 @@ class EncDecLM:
             n = jax.tree.leaves(params["dec_blocks"])[0].shape[0]
             ncs = []
             for i in range(n):
-                sl = lambda a: a[i]
+                def sl(a, i=i):
+                    return a[i]
                 x, nc_i = body(x, (jax.tree.map(sl, params["dec_blocks"]),
                                    jax.tree.map(sl, cache),
                                    jax.tree.map(sl, xkv)))
@@ -197,7 +198,8 @@ class EncDecLM:
         kvh, dh = cfg.n_kv_heads, cfg.head_dim
         L_ = cfg.n_layers
         e = cfg.encdec.enc_len
-        kv = lambda s: jax.ShapeDtypeStruct((L_, batch, s, kvh, dh), dt)
+        def kv(s):
+            return jax.ShapeDtypeStruct((L_, batch, s, kvh, dh), dt)
         return {
             "self_k": kv(max_len), "self_v": kv(max_len),
             "cross_k": kv(e), "cross_v": kv(e),
@@ -225,8 +227,6 @@ class EncDecLM:
         max_len = max_len or s
         cache = self.init_cache(b, max_len)
         x = self._embed_dec(params, tokens)
-        per_layer = jax.tree.map(lambda a: a, {"k": cache["self_k"],
-                                               "v": cache["self_v"]})
         stacked_cache = {"k": cache["self_k"], "v": cache["self_v"]}
         # scan needs per-layer cache dicts: restructure as xs
         cache_xs = {"k": stacked_cache["k"], "v": stacked_cache["v"]}

@@ -9,14 +9,14 @@ Pallas kernels instead.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.param import ParamDef
-from repro.parallel.sharding import current_rules, expert_axes, shard
+from repro.parallel.sharding import (current_rules, expert_axes, shard,
+                                     tp_psum)
 
 MASK_VALUE = -1e30
 VOCAB_PAD = 2048
@@ -294,7 +294,7 @@ def gqa_attention(x, p, cfg, *, causal=True, positions=None, use_rope=True):
                             bf16_scores=cfg.attn_bf16_scores,
                             chunk=cfg.attn_chunk)
     o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
-    o = o @ p["wo"]
+    o = tp_psum(o @ p["wo"])
     return shard(o, "batch", "seq_sp", "embed")
 
 
@@ -313,7 +313,7 @@ def gqa_prefill(x, p, cfg, positions=None):
                             triangular=cfg.causal_skip,
                             bf16_scores=cfg.attn_bf16_scores,
                             chunk=cfg.attn_chunk)
-    o = (o.reshape(b, s, -1) @ p["wo"])
+    o = tp_psum(o.reshape(b, s, -1) @ p["wo"])
     return shard(o, "batch", "seq_sp", "embed"), (k, v)
 
 
@@ -338,13 +338,13 @@ def gqa_decode(x, p, cfg, cache, pos):
     v_cache = shard(v_cache, "batch", "kv_seq", None, None)
     if cfg.use_pallas:
         from repro.kernels.decode_attention.ops import decode_attention
-        s = k_cache.shape[1]
-        bk = min(512, -(-s // 128) * 128)
-        o = decode_attention(q, k_cache, v_cache, pos, block_k=bk,
+        # block_k auto-fits to the cache length the op sees — the full
+        # S on one device, or the shard-local slice under shard_map
+        o = decode_attention(q, k_cache, v_cache, pos,
                              interpret=cfg.pallas_interpret)
     else:
         o = decode_attention_jnp(q, k_cache, v_cache, pos)
-    o = o.reshape(b, 1, -1) @ p["wo"]
+    o = tp_psum(o.reshape(b, 1, -1) @ p["wo"])
     return o, {"k": k_cache, "v": v_cache}
 
 
@@ -545,9 +545,13 @@ def ffn_defs(cfg, d_ff: Optional[int] = None) -> dict:
 
 
 def ffn(x, p):
+    """SwiGLU FFN.  Under ``tp_ctx`` the gate/up weights are
+    column-split and ``w_down`` row-split over the TP axis, so the
+    down-projection output is a partial sum — ``tp_psum`` completes it
+    (identity outside the context)."""
     h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
     h = shard(h, "batch", "seq_sp", "d_ff")
-    o = h @ p["w_down"]
+    o = tp_psum(h @ p["w_down"])
     return shard(o, "batch", "seq_sp", "embed")
 
 
@@ -664,16 +668,13 @@ def _moe_shard_map(x, p, cfg, router_type, rules, eax):
     exchanges them with a tiled all_to_all along the expert axis,
     computes its local experts, and reverses the exchange.
     """
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import shard_map
 
     mo = cfg.moe
     mesh = rules.mesh
     eaxes = (eax,) if isinstance(eax, str) else tuple(eax)
-    ep = 1
-    for a in eaxes:
-        ep *= mesh.shape[a]
-    e_loc = mo.n_experts // ep
 
     from repro.parallel.sharding import logical_pspec
     x_pspec = logical_pspec(("batch", "seq_sp", "embed"), rules)

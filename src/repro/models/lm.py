@@ -15,8 +15,6 @@ Public API (uniform across families; whisper has its own class):
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Optional
 
 import jax
@@ -245,7 +243,6 @@ class LM:
     def _run_stack(self, params, x, mode, cache, pos):
         """Run all blocks; returns (x, new_cache, aux_mean)."""
         cfg = self.cfg
-        auxes = []
 
         def scan_group(x, stacked, kinds_key, cache_g):
             """Scan homogeneous stacked blocks (cache as scan xs/ys)."""
@@ -281,8 +278,11 @@ class LM:
                 nc = {}
                 for j in range(period):
                     key = f"l{j}_{kinds[j]}"
-                    sub = lambda x_, bp_, c_, k_=kinds[j]: \
-                        self._apply_block(x_, bp_, k_, mode, c_, pos)
+
+                    def sub(x_, bp_, c_, k_=kinds[j]):
+                        return self._apply_block(x_, bp_, k_, mode, c_,
+                                                 pos)
+
                     if mode == "train" and cfg.sublayer_remat:
                         sub = self._maybe_remat(sub)
                     xx, nc_j, aux = sub(xx, bp[key], c[key])
@@ -386,10 +386,6 @@ class LM:
     def cache_pspecs(self, rules, per_slot_pos: bool = False):
         """PartitionSpecs matching cache_specs structure."""
         from repro.parallel.sharding import logical_pspec
-        cfg = self.cfg
-
-        def for_leaf(path_leaf_shape):
-            return None  # handled via tree_map_with_path below
 
         def spec_of(path: str, ndim: int):
             if path.endswith(("/k", "/v")):
@@ -495,7 +491,6 @@ class LM:
         return {"blocks": jnp.zeros((cfg.n_layers,), jnp.float32)}
 
     def prefill(self, params, inputs, max_len: Optional[int] = None):
-        cfg = self.cfg
         x = self._embed_inputs(params, inputs)
         seq = x.shape[1]
         max_len = max_len or seq

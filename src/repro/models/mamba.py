@@ -15,7 +15,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.param import ParamDef
-from repro.models.layers import rmsnorm_def
 from repro.parallel.sharding import shard
 
 CHUNK = 512

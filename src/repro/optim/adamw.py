@@ -10,7 +10,7 @@ fit v5e HBM (see EXPERIMENTS.md §Perf).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -107,7 +107,8 @@ def adamw_update(params, grads, state: OptState, lr: jax.Array,
 
         out = jax.tree.map(upd, params, grads, state.m, state.m_scale,
                            state.v)
-        is_t = lambda t: isinstance(t, tuple)
+        def is_t(t):
+            return isinstance(t, tuple)
         newp = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
         nm = jax.tree.map(lambda t: t[1], out, is_leaf=is_t)
         nms = jax.tree.map(lambda t: t[2], out, is_leaf=is_t)
@@ -124,7 +125,8 @@ def adamw_update(params, grads, state: OptState, lr: jax.Array,
         return newp, m, v
 
     out = jax.tree.map(upd, params, grads, state.m, state.v)
-    is3 = lambda t: isinstance(t, tuple)
+    def is3(t):
+        return isinstance(t, tuple)
     newp = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
     nm = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
     nv = jax.tree.map(lambda t: t[2], out, is_leaf=is3)

@@ -16,13 +16,13 @@ This is the optional alternative to the production DP x TP(+EP) mesh
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel.sharding import shard_map
 
 
 def pipeline_forward(stage_fn: Callable, mesh: Mesh, n_stages: int,

@@ -23,11 +23,35 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import inspect
 import threading
 from typing import Optional, Sequence, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:                           # jax >= 0.5 promotes shard_map to core
+    from jax import shard_map as _shard_map
+except ImportError:            # 0.4.x: the experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# core jax renamed check_rep -> check_vma (and 0.4.x knows only
+# check_rep); translate so call sites can stay on one spelling
+_SM_PARAMS = inspect.signature(_shard_map).parameters
+_REP_KW = ("check_rep" if "check_rep" in _SM_PARAMS else
+           "check_vma" if "check_vma" in _SM_PARAMS else None)
+
+
+def shard_map(fn, **kwargs):
+    """``jax.shard_map`` across jax versions (import path + the
+    ``check_rep``/``check_vma`` kwarg rename)."""
+    if "check_rep" in kwargs and _REP_KW != "check_rep":
+        kwargs = dict(kwargs)
+        val = kwargs.pop("check_rep")
+        if _REP_KW is not None:
+            kwargs[_REP_KW] = val
+    return _shard_map(fn, **kwargs)
+
 
 Axis = Union[None, str, tuple[str, ...]]
 
@@ -87,6 +111,93 @@ def expert_axes(rules: Optional[ShardingRules]) -> Optional[Axis]:
     return rules.table.get("experts")
 
 
+# ----------------------------------------------------------------------
+# Tensor-parallel shard_map context (serving)
+# ----------------------------------------------------------------------
+# The GSPMD path above annotates tensors and lets the compiler insert
+# collectives.  The sharded serving engine instead runs the model body
+# *inside* ``shard_map`` with per-shard weights (Megatron layout:
+# attention heads and FFN width column/row-split over one mesh axis),
+# which needs explicit ``psum`` after every row-parallel projection.
+# ``tp_ctx`` names the mapped axis for the duration of a trace;
+# ``tp_psum`` is the reduction hook the layers call — a no-op outside
+# the context, so single-device code is untouched.
+
+@contextlib.contextmanager
+def tp_ctx(axis: Optional[str]):
+    prev = getattr(_local, "tp_axis", None)
+    _local.tp_axis = axis
+    try:
+        yield axis
+    finally:
+        _local.tp_axis = prev
+
+
+def tp_axis_name() -> Optional[str]:
+    return getattr(_local, "tp_axis", None)
+
+
+def tp_psum(x: jax.Array) -> jax.Array:
+    """Sum partial row-parallel outputs over the tensor-parallel axis;
+    identity when no ``tp_ctx`` is active (single-device / GSPMD)."""
+    ax = tp_axis_name()
+    if ax is None:
+        return x
+    return jax.lax.psum(x, ax)
+
+
+def tp_local_config(cfg, tp: int):
+    """The per-shard view of ``cfg`` under ``tp``-way tensor parallelism.
+
+    Attention heads, KV heads and FFN width divide by ``tp``; everything
+    a shard computes locally (embeddings, norms, lm head) is unchanged.
+    ``d_head`` is pinned explicitly because the derived default
+    ``d_model // n_heads`` would change when ``n_heads`` shrinks.
+    """
+    import dataclasses as _dc
+
+    if tp == 1:
+        return cfg
+    unsupported = [n for n, v in (("moe", cfg.moe), ("mla", cfg.mla),
+                                  ("mamba", cfg.mamba),
+                                  ("hybrid", cfg.hybrid),
+                                  ("encdec", cfg.encdec))
+                   if v is not None]
+    if cfg.family != "dense" or unsupported:
+        raise ValueError(
+            f"tensor-parallel serving supports dense GQA models; "
+            f"{cfg.name} is family={cfg.family} ({unsupported})")
+    for dim, val in (("n_heads", cfg.n_heads),
+                     ("n_kv_heads", cfg.n_kv_heads), ("d_ff", cfg.d_ff)):
+        if val % tp != 0:
+            raise ValueError(f"{cfg.name}: {dim}={val} not divisible by "
+                             f"tp={tp}")
+    return _dc.replace(cfg, n_heads=cfg.n_heads // tp,
+                       n_kv_heads=cfg.n_kv_heads // tp,
+                       d_ff=cfg.d_ff // tp, d_head=cfg.head_dim)
+
+
+def make_tp_rules(cfg, mesh: Mesh, axis: str = "model") -> ShardingRules:
+    """Rules describing the Megatron weight layout for the TP engine.
+
+    Built from the decode-mode table, then restricted to pure tensor
+    parallelism: heads / KV heads / FFN width live on ``axis``; the KV
+    cache is partitioned by KV head (each shard owns its heads' cache
+    rows, per-slot ``pos`` replicated), so ``kv_seq`` sharding is
+    disabled; vocab/embed stay replicated so every shard can argmax the
+    full logits without a gather.
+    """
+    rules = make_rules(cfg, mesh, "decode")
+    table = dict(rules.table, kv_seq=None, vocab=None, seq_sp=None,
+                 batch=None, fsdp=None)
+    for logical in ("heads", "kv_heads", "heads_flat", "kv_flat", "d_ff"):
+        if table.get(logical) is None:
+            raise ValueError(
+                f"{cfg.name}: logical dim {logical!r} does not divide "
+                f"mesh axis {axis!r} (size {mesh.shape[axis]})")
+    return ShardingRules(mesh, table, "decode")
+
+
 def make_rules(cfg, mesh: Optional[Mesh], mode: str = "train") -> ShardingRules:
     """Build the logical->physical table for a config on a mesh.
 
@@ -97,7 +208,6 @@ def make_rules(cfg, mesh: Optional[Mesh], mode: str = "train") -> ShardingRules:
         return ShardingRules(None, {}, mode)
     dp = _dp_axes(mesh)
     tp_axis = "model" if "model" in mesh.axis_names else None
-    tp = _size(mesh, tp_axis)
 
     def fits(n: int, ax: Axis) -> Axis:
         return ax if ax is not None and n % _size(mesh, ax) == 0 else None

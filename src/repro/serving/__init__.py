@@ -2,3 +2,6 @@ from repro.serving.engine import (  # noqa: F401
     ContinuousBatchingEngine, Request, ServeEngine,
     attribute_request_energy,
 )
+from repro.serving.sharded import (  # noqa: F401
+    ShardedContinuousBatchingEngine,
+)

@@ -135,6 +135,10 @@ class ContinuousBatchingEngine:
                  n_slots: int = 8, chunk_steps: int = 8,
                  rules: Optional[ShardingRules] = None):
         self.model = model
+        # the model the jitted bodies trace through: ``model`` here; the
+        # tensor-parallel subclass swaps in its per-shard local model
+        # (same code, head/FFN dims divided by tp) after super().__init__
+        self.compute_model = model
         self.params = params
         self.max_len = max_len
         self.n_slots = n_slots
@@ -168,8 +172,8 @@ class ContinuousBatchingEngine:
         decode loop.  Unrelated slots' cache rows are untouched.
         """
         with sharding_ctx(self.rules):
-            logits, one = self.model.prefill(params, {"tokens": tokens},
-                                             max_len=self.max_len)
+            logits, one = self.compute_model.prefill(
+                params, {"tokens": tokens}, max_len=self.max_len)
         cache = state["cache"]
         layers = jax.tree.map(
             lambda big, small: jax.lax.dynamic_update_slice_in_dim(
@@ -198,8 +202,8 @@ class ContinuousBatchingEngine:
             active = remaining > 0
             pos_prev = cache["pos"]
             with sharding_ctx(self.rules):
-                logits, cache = self.model.decode_step(params, cache,
-                                                       tok[:, None])
+                logits, cache = self.compute_model.decode_step(
+                    params, cache, tok[:, None])
             nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
             tok = jnp.where(active, nxt, tok)
             cache = dict(cache, pos=jnp.where(active, pos_prev + 1,

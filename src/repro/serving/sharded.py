@@ -1,0 +1,138 @@
+"""Tensor-parallel continuous batching: the engine sharded over a mesh.
+
+``ShardedContinuousBatchingEngine`` runs the exact slot-based engine of
+``repro.serving.engine`` with its jitted bodies wrapped in ``shard_map``
+over a 1-D tensor-parallel mesh (Megatron layout):
+
+- attention heads and FFN width are column/row-split over the TP axis
+  (weight in_specs derived from the model's own ``ParamDef`` tree via
+  ``make_tp_rules`` — no second source of truth for the layout);
+- each shard owns its KV heads' slice of the KV cache — its own
+  partition of every slot's cache rows — while the per-slot ``pos``
+  vector, sampled tokens and remaining-budget vector are replicated, so
+  ragged multi-slot decode still runs as one fused call per shard (the
+  Pallas decode kernel / its jnp analogue just sees a smaller BH);
+- the model body inside the shard is the *same* LM code built from a
+  per-shard config (``tp_local_config``: heads and d_ff divided by tp),
+  with ``tp_psum`` completing each row-parallel projection; embeddings
+  and the LM head stay replicated so every shard argmaxes the full
+  logits and sampling needs no gather.
+
+Host orchestration (admission queue, chunked decode, TTFT stamps) is
+inherited unchanged — one engine, two execution layouts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel.sharding import (make_tp_rules, param_pspecs,
+                                     shard_map, tp_ctx, tp_local_config)
+from repro.serving.engine import ContinuousBatchingEngine
+
+
+def replicate_kv_heads(model, params, tp: int):
+    """GQA with fewer KV heads than shards: duplicate each KV head
+    ``tp / n_kv_heads`` times so every shard owns exactly one copy.
+
+    Repeating KV heads (and regrouping queries accordingly) computes
+    bit-identical attention — each query head still sees its original
+    K/V rows — so parity with the unsharded engine is preserved; the
+    cost is the duplicated KV-cache rows, the standard GQA trade under
+    tensor parallelism.  Returns the equivalent ``(model, params)``
+    with ``n_kv_heads == tp``.
+    """
+    cfg = model.cfg
+    kvh, dh = cfg.n_kv_heads, cfg.head_dim
+    if tp % kvh != 0:
+        raise ValueError(f"{cfg.name}: n_kv_heads={kvh} neither divides "
+                         f"nor is divided by tp={tp}")
+    r = tp // kvh
+
+    def expand(w):
+        """Repeat the per-KV-head blocks of a trailing (kvh*dh) dim."""
+        lead = w.shape[:-1]
+        w = w.reshape(lead + (kvh, dh))
+        return jnp.repeat(w, r, axis=-2).reshape(lead + (kvh * r * dh,))
+
+    blocks = dict(params["blocks"])
+    attn = dict(blocks["attn"])
+    for name in ("wk", "wv", "bk", "bv"):
+        if name in attn:
+            attn[name] = expand(attn[name])
+    blocks["attn"] = attn
+    params = dict(params, blocks=blocks)
+    cfg2 = dataclasses.replace(cfg, n_kv_heads=tp, d_head=dh)
+    return type(model)(cfg2), params
+
+
+class ShardedContinuousBatchingEngine(ContinuousBatchingEngine):
+    """``ContinuousBatchingEngine`` partitioned ``tp`` ways.
+
+    Usage (4 virtual host devices on CPU)::
+
+        eng = ShardedContinuousBatchingEngine(model, params, tp=4,
+                                              max_len=96, n_slots=4)
+        done = eng.serve(requests)       # same contract as the base
+
+    ``tp=1`` degenerates to a 1-device mesh and is token-identical to
+    the unsharded engine (the parity gate CI runs on virtual devices).
+    """
+
+    def __init__(self, model, params, *, tp: Optional[int] = None,
+                 mesh: Optional[Mesh] = None, axis: str = "model", **kw):
+        from repro.launch.mesh import make_tp_mesh
+
+        if mesh is None:
+            mesh = make_tp_mesh(tp or len(jax.devices()), axis)
+        self.mesh = mesh
+        self.tp_axis = axis
+        self.tp = mesh.shape[axis]
+        cfg = model.cfg
+        if (self.tp > 1 and cfg.family == "dense"
+                and cfg.n_kv_heads % self.tp != 0):
+            model, params = replicate_kv_heads(model, params, self.tp)
+            cfg = model.cfg
+        local_cfg = tp_local_config(cfg, self.tp)
+        rules = make_tp_rules(cfg, mesh, axis)
+        self._param_specs = param_pspecs(model.param_defs(), rules)
+        self._cache_specs = model.cache_pspecs(rules, per_slot_pos=True)
+        self._state_specs = {"cache": self._cache_specs,
+                             "tok": P(), "remaining": P()}
+        if kw.get("rules") is not None:
+            raise ValueError("ShardedContinuousBatchingEngine manages its "
+                             "own sharding; rules must be None")
+        super().__init__(model, params, **kw)
+        # the shard-local body traces through the per-shard model; the
+        # global ``self.model`` keeps defining the (full) cache layout
+        self.compute_model = type(model)(local_cfg)
+
+    def _shard_mapped(self, base_impl, n_extra: int):
+        """Wrap a base engine body in shard_map: params and cache enter
+        partitioned (weights by head/FFN column, cache by KV head),
+        scalars/tokens replicated; outputs are device-invariant by
+        construction (every row-parallel projection ends in a psum)."""
+
+        def local_fn(params, state, *extra):
+            with tp_ctx(self.tp_axis):
+                return base_impl(params, state, *extra)
+
+        return shard_map(
+            local_fn, mesh=self.mesh,
+            in_specs=(self._param_specs, self._state_specs) +
+                     (P(),) * n_extra,
+            out_specs=(self._state_specs, P()),
+            check_rep=False)
+
+    def _prefill_slot_impl(self, params, state, tokens, slot, budget):
+        base = super()._prefill_slot_impl
+        return self._shard_mapped(base, 3)(params, state, tokens, slot,
+                                           budget)
+
+    def _decode_chunk_impl(self, params, state):
+        base = super()._decode_chunk_impl
+        return self._shard_mapped(base, 0)(params, state)

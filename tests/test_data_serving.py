@@ -1,6 +1,5 @@
 """Data pipeline packing + serving engine integration tests."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduce_config

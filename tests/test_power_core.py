@@ -1,9 +1,8 @@
 """MLPerf Power methodology tests: instruments, logs, summarizer,
 compliance, director protocol, loadgen scenarios."""
 import numpy as np
-import pytest
 
-from repro.core import (AnalyzerSpec, Clock, Director, IOManager, LogEvent,
+from repro.core import (AnalyzerSpec, Clock, Director, IOManager,
                         MLPerfLogger, NodeTelemetry, QuerySampleLibrary,
                         StepWork, SwitchEstimator, SystemDescription,
                         SystemPowerModel, TinyPowerModel, VirtualAnalyzer,
@@ -60,7 +59,8 @@ class TestInstruments:
         assert abs(np.mean(w) - 140.0) / 140.0 < 0.01
 
     def test_range_mode_improves_accuracy(self):
-        src = lambda t: np.full_like(t, 40.0)
+        def src(t):
+            return np.full_like(t, 40.0)
         auto = VirtualAnalyzer(seed=2)
         _, w_auto = auto.measure(src, 60.0)
         fixed = VirtualAnalyzer(seed=2)
