@@ -24,8 +24,8 @@ def main(argv=None) -> None:
                             energy_per_inference, power_range,
                             quantization_efficiency, roofline_table,
                             scale_sweep, scaling_energy,
-                            serving_throughput, sw_hw_optimizations,
-                            tiny_edge_measured)
+                            serving_throughput, speculative_efficiency,
+                            sw_hw_optimizations, tiny_edge_measured)
 
     modules = [
         ("fig2_power_range", power_range),
@@ -39,6 +39,7 @@ def main(argv=None) -> None:
         ("measured_tiny_edge", tiny_edge_measured),
         ("serving_throughput", serving_throughput),
         ("scale_sweep", scale_sweep),
+        ("speculative_efficiency", speculative_efficiency),
     ]
     print("name,us_per_call,derived")
     n_rows = 0

@@ -71,7 +71,10 @@ def _continuous_serve_queue(engine, cfg):
     return serve
 
 
-def csv(smoke: bool = False) -> list[str]:
+def metrics(smoke: bool = False) -> dict:
+    """Measured numbers keyed for the CI perf gate
+    (``scripts/perf_gate.py``): tokens/s and tokens/J per engine plus
+    the continuous-over-fixed speedup ratio."""
     import jax
 
     from repro.configs import get_config, reduce_config
@@ -105,27 +108,60 @@ def csv(smoke: bool = False) -> list[str]:
 
     scenario = Server(target_qps=qps, latency_slo_s=10.0,
                       min_duration_s=0.0, min_queries=n, mode="queue")
-    rows = []
-    results = {}
-    for name, serve in (("fixed", _fixed_serve_queue(fixed, cfg)),
-                        ("continuous", _continuous_serve_queue(cont, cfg))):
-        sut = CallableSUT(name=f"serving-{name}", serve_queue=serve,
-                          power=busy_w)
-        # runs last well under a second: sample at 1 kHz so the energy
-        # window resolves each engine's actual duration
+    suts = {
+        "fixed": CallableSUT(name="serving-fixed",
+                             serve_queue=_fixed_serve_queue(fixed, cfg),
+                             power=busy_w),
+        "continuous": CallableSUT(
+            name="serving-continuous",
+            serve_queue=_continuous_serve_queue(cont, cfg),
+            power=busy_w),
+    }
+
+    def run_once(sut):
+        # 1 kHz sampling resolves each engine's sub-second duration
         director = Director(analyzer=VirtualAnalyzer(
             AnalyzerSpec(sample_hz=1000.0), seed=0), seed=0)
-        r = PowerRun(sut, scenario, seed=0, director=director).run()
+        return PowerRun(sut, scenario, seed=0, director=director).run()
+
+    # interleaved best-of-4: keeps the speedup ratio honest under
+    # temporally-correlated machine noise (the CI perf gate compares
+    # these numbers)
+    from functools import partial
+
+    from benchmarks.common import interleaved_best_of
+
+    best = interleaved_best_of(
+        {name: partial(run_once, sut) for name, sut in suts.items()})
+
+    out: dict = {"qps": qps}
+    for name, r in best.items():
         m = r.outcome.server
         dur = r.outcome.result.duration_s
-        tok_j = m.total_tokens / max(r.summary.energy_j, 1e-12)
-        results[name] = m.tokens_per_s
+        out[name] = {
+            "tokens_per_s": m.tokens_per_s,
+            "tok_per_j": m.total_tokens / max(r.summary.energy_j, 1e-12),
+            "us_per_tok": dur / m.total_tokens * 1e6,
+        }
+    out["speedup"] = (out["continuous"]["tokens_per_s"]
+                      / max(out["fixed"]["tokens_per_s"], 1e-12))
+    out["chunk_syncs"] = cont.host_syncs
+    return out
+
+
+def csv(smoke: bool = False) -> list[str]:
+    m = metrics(smoke=smoke)
+    qps = m["qps"]
+    rows = []
+    for name in ("fixed", "continuous"):
+        p = m[name]
         rows.append(f"serving_{name}_qps{qps:.0f},"
-                    f"{dur / m.total_tokens * 1e6:.1f},"
-                    f"{m.tokens_per_s:.1f}toks/s;{tok_j:.3f}tok/J")
+                    f"{p['us_per_tok']:.1f},"
+                    f"{p['tokens_per_s']:.1f}toks/s;"
+                    f"{p['tok_per_j']:.3f}tok/J")
     rows.append(f"serving_continuous_speedup,0.0,"
-                f"{results['continuous'] / results['fixed']:.2f}x;"
-                f"chunk_syncs={cont.host_syncs}")
+                f"{m['speedup']:.2f}x;"
+                f"chunk_syncs={m['chunk_syncs']}")
     return rows
 
 

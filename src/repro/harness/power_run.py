@@ -160,8 +160,11 @@ class PowerRun:
         if completed:
             from repro.serving import attribute_request_energy
             times_s, watts = _power_samples(power_log)
+            # speculative SUTs weight the split by per-request compute
+            # (target tokens + draft forwards); others split equally
+            weight = getattr(self.sut, "request_energy_weight", None)
             per_request = attribute_request_energy(completed, times_s,
-                                                   watts)
+                                                   watts, weight=weight)
         return SubmissionResult(outcome, summary, report, submission,
                                 perf_log, power_log, per_request)
 

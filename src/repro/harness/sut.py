@@ -217,11 +217,22 @@ class ContinuousBatchingSUT(BaseSUT):
     occupancy (idle floor + per-slot share of the busy draw over the
     completed requests' spans), so per-request energy attribution sees
     a realistic trace.
+
+    ``draft``: the draft model's config when the engine decodes
+    speculatively.  It switches per-request energy attribution to
+    compute-weighted splitting: a request's share of each interval is
+    proportional to the work it triggered — target token-forwards
+    (``verify_tokens``: a low-acceptance request burns more verify
+    forwards per emitted token) plus its draft-model forwards scaled
+    by the draft/target parameter ratio — so both models' work is
+    billed to the request that caused it and the per-request energies
+    still sum to the fleet total.
     """
 
     def __init__(self, engine, cfg, *, name: str = "continuous-engine",
                  make_request: Callable[[int, dict, float], Any],
                  system: SystemSpec = EDGE_SYSTEM, n_chips: int = 1,
+                 draft: Any = None,
                  sysdesc: Optional[SystemDescription] = None):
         super().__init__(name, sysdesc)
         self.engine = engine
@@ -229,6 +240,17 @@ class ContinuousBatchingSUT(BaseSUT):
         self.make_request = make_request
         self.meter = SystemPowerModel(system, n_chips)
         self.completed: list = []
+        self.draft_cfg = draft
+        if draft is not None:
+            ratio = draft.param_count() / max(1, cfg.param_count())
+
+            def request_energy_weight(r, _ratio=ratio):
+                target = (getattr(r, "verify_tokens", 0)
+                          or len(r.output or []))
+                return target + _ratio * getattr(r, "draft_tokens", 0)
+
+            # picked up by PowerRun via getattr; absent -> equal split
+            self.request_energy_weight = request_energy_weight
 
     def serve_queue(self, arrivals: list[tuple[dict, float]]) -> list:
         reqs = [self.make_request(i, s, a)
@@ -286,6 +308,7 @@ class ShardedSUT(ContinuousBatchingSUT):
                  make_request: Callable[[int, dict, float], Any],
                  system: SystemSpec = EDGE_SYSTEM,
                  scale: Optional[str] = None,
+                 draft: Any = None,
                  sysdesc: Optional[SystemDescription] = None):
         tp = engine.tp
         meter = SystemPowerModel(system, tp)
@@ -303,7 +326,7 @@ class ShardedSUT(ContinuousBatchingSUT):
                 idle_system_watts=meter.system_watts(None))
         super().__init__(engine, cfg, name=name,
                          make_request=make_request, system=system,
-                         n_chips=tp, sysdesc=sysdesc)
+                         n_chips=tp, draft=draft, sysdesc=sysdesc)
 
 
 class ReplicatedSUT(BaseSUT):
@@ -336,6 +359,12 @@ class ReplicatedSUT(BaseSUT):
         super().__init__(name, sysdesc)
         self.replicas = replicas
         self.completed: list = []
+        # speculative fleets: delegate draft-aware energy weighting to
+        # the replicas' (identical) weight functions so per-request
+        # attribution keeps billing draft forwards in fleet mode
+        weight = getattr(replicas[0], "request_energy_weight", None)
+        if weight is not None:
+            self.request_energy_weight = weight
 
     @property
     def n_replicas(self) -> int:

@@ -71,6 +71,95 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                     jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _verify_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, block_k: int, n_k: int,
+                   t: int, g: int):
+    """Multi-token verify attention: ``t`` query tokens per row.
+
+    The speculative-decoding verify path: row ``ib`` holds the window
+    ``[pos, pos + t)`` of one (batch, KV-head) pair — query token ``j``
+    of the window attends to cache positions ``<= pos + j`` (causal
+    inside the window, the committed prefix below it).  The ``t * g``
+    query rows share one MXU block; each masks its own diagonal via the
+    row's window offset (``row // g``).  Block skipping covers the whole
+    window: a KV block is visited iff it starts at or below the
+    window's last position.
+    """
+    ib = pl.program_id(0)
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[ib]                              # window start
+
+    @pl.when(ik * block_k <= pos + t - 1)
+    def _step():
+        q = q_ref[0].astype(jnp.float32).reshape(t * g, -1)   # (t*g, d)
+        k = k_ref[0].astype(jnp.float32)                      # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # (t*g, bk)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        q_off = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // g
+        s = jnp.where(k_pos <= pos + q_off, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1)[:, None])
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1)[:, None]
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        o = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = o.reshape(t, g, o.shape[-1]).astype(o_ref.dtype)
+
+
+def verify_attention_kernel(q, k, v, pos, *, block_k: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """q: (BH, T, G, D); k, v: (BH, S, D); pos: () or (BH,) int32 —
+    per-row window start (query token j sits at position pos + j).
+    Returns (BH, T, G, D)."""
+    bh, t, g, d = q.shape
+    s = k.shape[1]
+    assert s % block_k == 0, (s, block_k)
+    n_k = s // block_k
+    scale = 1.0 / math.sqrt(d)
+    kernel = functools.partial(_verify_kernel, scale=scale,
+                               block_k=block_k, n_k=n_k, t=t, g=g)
+    pos_arr = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32).reshape(-1), (bh,))
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_k),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, t, g, d), lambda b, ik: (b, 0, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, g, d), lambda b, ik: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((t * g, 1), jnp.float32),
+            pltpu.VMEM((t * g, 1), jnp.float32),
+            pltpu.VMEM((t * g, d), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos_arr, q, k, v)
+
+
 def decode_attention_kernel(q, k, v, pos, *, block_k: int = 512,
                             interpret: bool = False) -> jax.Array:
     """q: (BH, G, D); k, v: (BH, S, D); pos: () or (BH,) int32 —

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention.decode_attention import (
-    decode_attention_kernel,
+    decode_attention_kernel, verify_attention_kernel,
 )
 
 
@@ -57,3 +57,37 @@ def decode_attention(q, k_cache, v_cache, pos, *,
                                 interpret=interpret)
     return o.reshape(b, kvh, g, d).reshape(b, h, d)[:, None].transpose(
         0, 1, 2, 3).reshape(b, 1, h, d)
+
+
+@partial(jax.jit, static_argnames=("block_k", "interpret"))
+def verify_attention(q, k_cache, v_cache, pos, *,
+                     block_k: Optional[int] = None,
+                     interpret: bool = False):
+    """Multi-token verify attention against a KV cache (the speculative
+    decode verify path).
+
+    q: (B, T, H, D); caches: (B, S, KVH, D); pos: () or (B,) int32 —
+    per-slot window start; query token ``t`` attends to cache positions
+    ``<= pos + t``.  Returns (B, T, H, D).  Like ``decode_attention``,
+    the grid is derived from the shapes the wrapper sees, so it tiles
+    shard-local rows under ``shard_map`` unchanged.
+    """
+    b, t, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    block_k = fit_block_k(s, block_k)
+    qr = q.reshape(b, t, kvh, g, d).transpose(0, 2, 1, 3, 4)
+    qr = qr.reshape(b * kvh, t, g, d)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+    pk = (-s) % block_k
+    if pk:
+        kr = jnp.pad(kr, ((0, 0), (0, pk), (0, 0)))
+        vr = jnp.pad(vr, ((0, 0), (0, pk), (0, 0)))
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:                      # (B,) -> (B*KVH,): row b*kvh+j
+        pos = jnp.repeat(pos, kvh)
+    o = verify_attention_kernel(qr, kr, vr, pos, block_k=block_k,
+                                interpret=interpret)
+    return o.reshape(b, kvh, t, g, d).transpose(0, 2, 1, 3, 4).reshape(
+        b, t, h, d)

@@ -23,3 +23,23 @@ def decode_attention_ref(q, k, v, pos) -> jax.Array:
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bgk,bkd->bgd", p, v.astype(jnp.float32))
     return o.astype(q.dtype)
+
+
+def verify_attention_ref(q, k, v, pos) -> jax.Array:
+    """Multi-token verify oracle.  q: (BH, T, G, D); k, v: (BH, S, D);
+    query token ``t`` of row ``b`` attends to positions ``<= pos_b + t``
+    (causal inside the ``[pos, pos + T)`` window).  ``pos`` is a scalar
+    or a per-row (BH,) vector."""
+    d = q.shape[-1]
+    s = jnp.einsum("btgd,bkd->btgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.full((q.shape[0],), pos, jnp.int32)
+    kv_pos = jnp.arange(k.shape[1])
+    q_pos = pos[:, None] + jnp.arange(q.shape[1])[None, :]      # (BH, T)
+    mask = kv_pos[None, None, :] <= q_pos[:, :, None]           # (BH, T, S)
+    s = jnp.where(mask[:, :, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("btgk,bkd->btgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -20,6 +20,18 @@ summarizer + compliance in one shot.
       --reduce --scenario server --engine continuous --qps 8 \
       --min-duration 2
 
+Speculative decoding (``--speculative --draft <config> --k 4``): a
+small draft model proposes k tokens per slot and the target verifies
+the window in one multi-token forward — greedy output is
+token-identical to plain decode, and the run reports the measured
+acceptance rate.  ``--draft truncate`` (default) needs no second
+checkpoint: it reuses the target's first ``--draft-layers`` blocks
+(LayerSkip-style early exit).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+      --reduce --scenario server --engine continuous --speculative \
+      --k 4 --qps 8 --min-duration 2
+
 Scale axis (the paper's µW -> MW sweep): ``--tp K`` shards the
 continuous engine over a K-way tensor-parallel mesh
 (``ShardedContinuousBatchingEngine`` + ``ShardedSUT``), ``--replicas R``
@@ -47,7 +59,8 @@ from repro.harness import (ContinuousBatchingSUT, MultiStream, Offline,
 from repro.models import build_model
 from repro.models.param import init_params
 from repro.serving import (ContinuousBatchingEngine, Request, ServeEngine,
-                           ShardedContinuousBatchingEngine)
+                           ShardedContinuousBatchingEngine,
+                           truncate_draft)
 
 
 def _make_request(key, cfg, i, arrival_s=0.0, new_tokens=8):
@@ -71,18 +84,50 @@ def _scenario_for(args):
     return SingleStream(min_duration_s=args.min_duration)
 
 
-def _build_continuous_engine(args, model, params):
+def _build_draft(args, cfg, model, params):
+    """(draft_model, draft_params, draft_cfg) for ``--speculative``.
+
+    ``--draft truncate`` builds the LayerSkip-style self-draft (the
+    target's first ``--draft-layers`` blocks, shared embeddings/head);
+    any arch name builds that config (reduced alongside ``--reduce``)
+    with fresh weights — vocabularies must match.
+    """
+    if args.draft == "truncate":
+        dmodel, dparams = truncate_draft(model, params,
+                                         n_layers=args.draft_layers)
+        return dmodel, dparams, dmodel.cfg
+    dcfg = get_config(args.draft)
+    if args.reduce:
+        dcfg = reduce_config(dcfg)
+    if dcfg.vocab_size != cfg.vocab_size:
+        raise SystemExit(
+            f"--draft {args.draft}: vocab {dcfg.vocab_size} != target "
+            f"vocab {cfg.vocab_size} (draft and target must share the "
+            f"tokenizer)")
+    dmodel = build_model(dcfg)
+    dparams = init_params(dmodel.param_defs(), jax.random.PRNGKey(2))
+    return dmodel, dparams, dcfg
+
+
+def _build_continuous_engine(args, model, params, spec_kw):
     if args.tp > 1:
         return ShardedContinuousBatchingEngine(
             model, params, tp=args.tp, max_len=args.max_len,
-            n_slots=args.slots, chunk_steps=args.chunk_steps)
+            n_slots=args.slots, chunk_steps=args.chunk_steps, **spec_kw)
     return ContinuousBatchingEngine(
         model, params, max_len=args.max_len, n_slots=args.slots,
-        chunk_steps=args.chunk_steps)
+        chunk_steps=args.chunk_steps, **spec_kw)
 
 
 def _serve_continuous(args, cfg, model, params):
     key = jax.random.PRNGKey(1)
+
+    spec_kw, draft_cfg = {}, None
+    if args.speculative:
+        dmodel, dparams, draft_cfg = _build_draft(args, cfg, model,
+                                                  params)
+        spec_kw = dict(draft_model=dmodel, draft_params=dparams,
+                       spec_k=args.k)
 
     def make_request(i, s, a):
         # rid from the loadgen query id, not the per-replica enumerate
@@ -92,18 +137,21 @@ def _serve_continuous(args, cfg, model, params):
                              new_tokens=args.new_tokens)
 
     def one_sut(idx):
-        engine = _build_continuous_engine(args, model, params)
+        engine = _build_continuous_engine(args, model, params, spec_kw)
         # warmup/compile: one prefill + one chunk outside the measurement
         engine.serve([_make_request(key, cfg, 10 ** 6,
                                     new_tokens=args.new_tokens)],
                      honor_arrivals=False)
         name = f"{args.arch}-continuous" + (
+            f"-k{args.k}" if args.speculative else "") + (
             f"-r{idx}" if args.replicas > 1 else "")
         if args.tp > 1:
             return ShardedSUT(engine, cfg, name=f"{name}-tp{args.tp}",
-                              make_request=make_request), engine
+                              make_request=make_request,
+                              draft=draft_cfg), engine
         return ContinuousBatchingSUT(engine, cfg, name=name,
-                                     make_request=make_request), engine
+                                     make_request=make_request,
+                                     draft=draft_cfg), engine
 
     pairs = [one_sut(i) for i in range(args.replicas)]
     engines = [e for _, e in pairs]
@@ -125,6 +173,13 @@ def _serve_continuous(args, cfg, model, params):
     print(f"  {m.total_tokens / max(r.summary.energy_j, 1e-9):.3f} tok/J"
           + (f" across tp={args.tp}" if args.tp > 1 else "")
           + (f" x {args.replicas} replicas" if args.replicas > 1 else ""))
+    if args.speculative:
+        acc = sum(e.spec_stats["accepted"] for e in engines) / max(
+            1, sum(e.spec_stats["proposed"] for e in engines))
+        print(f"  speculative k={args.k} "
+              f"(draft {draft_cfg.name}): acceptance {acc:.2f}, "
+              f"{sum(e.spec_stats['rounds'] for e in engines)} verified "
+              f"slot-rounds")
     e = np.asarray(list((r.per_request_energy_j or {}).values()))
     if e.size:
         print(f"  per-request energy: mean {e.mean():.2f} J, "
@@ -158,6 +213,17 @@ def main(argv=None):
     ap.add_argument("--replicas", type=int, default=1,
                     help="independent engine replicas behind one "
                          "admission queue (fleet power summed)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculative decoding: draft k tokens with a "
+                         "small model, verify in one target forward")
+    ap.add_argument("--draft", default="truncate",
+                    help="draft model: 'truncate' (the target's first "
+                         "--draft-layers blocks, shared embed/head) or "
+                         "an arch name with a matching vocab")
+    ap.add_argument("--draft-layers", type=int, default=2,
+                    help="layers kept by --draft truncate")
+    ap.add_argument("--k", type=int, default=4,
+                    help="draft tokens per verify round")
     ap.add_argument("--qps", type=float, default=4.0)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=8)
@@ -171,6 +237,9 @@ def main(argv=None):
     if (args.tp > 1 or args.replicas > 1) and args.engine != "continuous":
         ap.error("--tp/--replicas shard the continuous engine; add "
                  "--engine continuous")
+    if args.speculative and args.engine != "continuous":
+        ap.error("--speculative is a continuous-engine decode mode; "
+                 "add --engine continuous")
 
     cfg = get_config(args.arch)
     if args.reduce:

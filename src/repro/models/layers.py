@@ -200,6 +200,58 @@ def decode_attention_jnp(q, k_cache, v_cache, pos) -> jax.Array:
     return o.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def verify_attention_jnp(q, k_cache, v_cache, pos) -> jax.Array:
+    """Multi-token attention against a KV cache (speculative verify).
+
+    q: (B, T, H, D); caches: (B, S, KVH, D); pos: scalar or per-slot
+    (B,) vector — the window start.  Query token ``t`` of slot ``b``
+    attends to cache positions ``<= pos_b + t``: causal within the
+    ``[pos, pos + T)`` draft window, full prefix below it.  The T = 1
+    case reduces exactly to ``decode_attention_jnp``.
+    """
+    b, t, h, d = q.shape
+    skv, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, t, kvh, g, d)
+    s = jnp.einsum("bthgd,bkhd->bthgk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        pos = jnp.full((b,), pos, jnp.int32)
+    kv_pos = jnp.arange(skv)
+    q_pos = pos[:, None] + jnp.arange(t)[None, :]             # (B, T)
+    mask = kv_pos[None, None, :] <= q_pos[:, :, None]         # (B, T, S)
+    s = jnp.where(mask[:, :, None, None, :], s, MASK_VALUE)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bthgk,bkhd->bthgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, t, h, d).astype(q.dtype)
+
+
+def cache_update_window(cache: jax.Array, new: jax.Array, pos,
+                        dus: bool = False) -> jax.Array:
+    """Insert ``new`` (B, T, KVH, D) at rows ``[pos, pos + T)`` of the
+    cache — the speculative verify window write.  ``pos`` is a scalar
+    or a per-slot (B,) vector; every slot writes its own contiguous
+    window.  Same two strategies as ``cache_update``: one-hot masked
+    update (shards cleanly) or per-row ``dynamic_update_slice`` (one
+    small contiguous write)."""
+    t = new.shape[1]
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        pos = jnp.full((cache.shape[0],), pos, jnp.int32)
+    if dus:
+        return jax.vmap(
+            lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
+                c, n.astype(c.dtype), p, axis=0))(cache, new, pos)
+    rows = pos[:, None] + jnp.arange(t)[None, :]              # (B, T)
+    oh = (jnp.arange(cache.shape[1])[None, None, :]
+          == rows[:, :, None]).astype(cache.dtype)            # (B, T, S)
+    hit = oh.sum(axis=1)                                      # (B, S)
+    return (cache * (1 - hit[:, :, None, None])
+            + jnp.einsum("bts,btkd->bskd", oh, new.astype(cache.dtype)))
+
+
 def cache_update(cache: jax.Array, new: jax.Array, pos,
                  dus: bool = False) -> jax.Array:
     """Insert ``new`` (B, 1, KVH, D) at index ``pos`` of a seq-sharded cache.
@@ -345,6 +397,39 @@ def gqa_decode(x, p, cfg, cache, pos):
     else:
         o = decode_attention_jnp(q, k_cache, v_cache, pos)
     o = tp_psum(o.reshape(b, 1, -1) @ p["wo"])
+    return o, {"k": k_cache, "v": v_cache}
+
+
+def gqa_verify(x, p, cfg, cache, pos):
+    """Multi-token verify (speculative decoding): score T draft tokens
+    per slot in one forward.
+
+    x: (B, T, d); ``pos`` is a scalar or per-slot (B,) window start.
+    Token ``t`` ropes/caches at position ``pos + t`` and attends
+    causally within the window (committed prefix below it).  Rejected
+    tokens need no explicit rollback: attention masks by position, and
+    the next verify window starts at the accepted frontier, overwriting
+    the stale rows in place.  T = 1 reduces to ``gqa_decode``.
+    """
+    b, t, _ = x.shape
+    q, k, v = _proj_qkv(x, p, cfg)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        pos = jnp.full((b,), pos, jnp.int32)
+    positions = pos[:, None] + jnp.arange(t)[None, :]         # (B, T)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    k_cache = cache_update_window(cache["k"], k, pos, dus=cfg.cache_dus)
+    v_cache = cache_update_window(cache["v"], v, pos, dus=cfg.cache_dus)
+    k_cache = shard(k_cache, "batch", "kv_seq", None, None)
+    v_cache = shard(v_cache, "batch", "kv_seq", None, None)
+    if cfg.use_pallas:
+        from repro.kernels.decode_attention.ops import verify_attention
+        o = verify_attention(q, k_cache, v_cache, pos,
+                             interpret=cfg.pallas_interpret)
+    else:
+        o = verify_attention_jnp(q, k_cache, v_cache, pos)
+    o = tp_psum(o.reshape(b, t, -1) @ p["wo"])
     return o, {"k": k_cache, "v": v_cache}
 
 

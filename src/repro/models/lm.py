@@ -153,6 +153,10 @@ class LM:
         h = L.rmsnorm(x, bp["ln1"], cfg.norm_eps)
         new_cache = cache
         if kind.startswith("rwkv"):
+            if mode == "verify":
+                raise NotImplementedError(
+                    "speculative verify needs random-access KV attention; "
+                    "rwkv state has no multi-token verify path")
             if mode == "decode":
                 o, st = R.time_mix_decode(h, bp["time"],
                                           cfg, {"S": cache["S"],
@@ -175,9 +179,18 @@ class LM:
             return x + o2, new_cache, aux
 
         mix, ff = kind.split("_")
+        if mode == "verify" and mix != "attn":
+            raise NotImplementedError(
+                f"speculative verify needs random-access KV attention; "
+                f"layer kind {kind!r} has no multi-token verify path")
         if mix == "attn":
             if mode == "train":
                 o = L.gqa_attention(h, bp["attn"], cfg)
+            elif mode == "verify":
+                o, kvc = L.gqa_verify(h, bp["attn"], cfg,
+                                      {"k": cache["k"], "v": cache["v"]},
+                                      pos)
+                new_cache = dict(cache, **kvc)
             elif mode == "prefill":
                 o, (k, v) = L.gqa_prefill(h, bp["attn"], cfg)
                 s_max = cache["k"].shape[1]
@@ -500,6 +513,24 @@ class LM:
         logits = self._logits(params, x[:, -1:])
         return logits, {"layers": layers,
                         "pos": jnp.asarray(seq, jnp.int32)}
+
+    def verify_step(self, params, cache, tokens):
+        """tokens: (B, T) -> logits (B, T, Vp), updated cache.
+
+        The speculative-decoding verify path: T = k + 1 tokens per slot
+        enter at per-slot positions ``[pos, pos + T)``; each writes its
+        K/V at ``pos + t`` and attends causally within the window.
+        ``cache["pos"]`` is returned *unchanged* — the engine advances
+        it by each slot's accepted length, which is what rolls rejected
+        tokens back in place (their cache rows sit beyond the advanced
+        frontier and are overwritten by the next window write).
+        """
+        pos = cache["pos"]
+        x = self._embed_inputs(params, {"tokens": tokens})
+        x, layers, _ = self._run_stack(params, x, "verify",
+                                       cache["layers"], pos)
+        logits = self._logits(params, x)
+        return logits, {"layers": layers, "pos": pos}
 
     def decode_step(self, params, cache, tokens):
         """tokens: (B, 1) -> logits (B, 1, Vp), updated cache.

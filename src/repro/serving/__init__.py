@@ -5,3 +5,6 @@ from repro.serving.engine import (  # noqa: F401
 from repro.serving.sharded import (  # noqa: F401
     ShardedContinuousBatchingEngine,
 )
+from repro.serving.speculative import (  # noqa: F401
+    damp_upper_layers, greedy_verify, speculative_sample, truncate_draft,
+)

@@ -32,7 +32,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.parallel.sharding import ShardingRules, sharding_ctx
+from repro.parallel.sharding import ShardingRules, sharding_ctx, tp_ctx
+from repro.serving.speculative import greedy_verify, speculative_sample
+
+
+def _bounded_while(n_steps: int, live, body, init):
+    """``fori_loop(0, n_steps, body, init)`` that additionally stops as
+    soon as ``live(state)`` is False — chunk loops exit early once every
+    slot has exhausted its budget instead of burning whole-batch
+    forwards on an inactive batch (budget/chunk misalignment, drain
+    tails)."""
+
+    def cond(c):
+        i, st = c
+        return (i < n_steps) & live(st)
+
+    def step(c):
+        i, st = c
+        return i + 1, body(i, st)
+
+    return jax.lax.while_loop(cond, step, (0, init))[1]
 
 
 @dataclasses.dataclass
@@ -46,6 +65,13 @@ class Request:
     done_s: Optional[float] = None
     output: Optional[list] = None
     energy_j: Optional[float] = None  # filled by attribute_request_energy
+    draft_tokens: int = 0             # draft-model forwards this request
+                                      # triggered (speculative mode)
+    verify_tokens: int = 0            # target-model token-forwards this
+                                      # request triggered (speculative
+                                      # mode: prefill + rounds*(k+1) —
+                                      # more per emitted token at low
+                                      # acceptance)
 
     def ttft_s(self) -> Optional[float]:
         if self.first_token_s is None:
@@ -129,11 +155,28 @@ class ContinuousBatchingEngine:
     (``host_syncs`` counts them); tokens, greedy sampling, per-slot
     position advance and done flags all stay on device inside a
     ``lax.fori_loop``.
+
+    Speculative decoding (``spec_k > 0`` with a ``draft_model``): each
+    chunk runs ``chunk_steps`` draft-and-verify rounds instead of
+    ``chunk_steps`` single-token steps.  Per round every live slot
+    drafts ``spec_k`` tokens with the small draft model, the target
+    scores the whole window in one multi-token ``verify_step`` forward,
+    and acceptance (greedy exact-match, or rejection sampling at
+    ``temperature > 0`` — see ``repro.serving.speculative``) commits a
+    per-slot prefix plus one bonus token.  Accepted lengths are ragged
+    across slots; per-slot write offsets keep the emitted-token buffer
+    contiguous so the host still syncs exactly once per chunk.  The KV
+    cache rolls rejected tokens back in place: only the per-slot
+    position advances, so stale rows sit beyond the frontier and the
+    next verify window overwrites them.  Greedy speculative output is
+    token-identical to plain greedy decode for any draft model.
     """
 
     def __init__(self, model, params, *, max_len: int = 256,
                  n_slots: int = 8, chunk_steps: int = 8,
-                 rules: Optional[ShardingRules] = None):
+                 rules: Optional[ShardingRules] = None,
+                 draft_model=None, draft_params=None, spec_k: int = 0,
+                 temperature: float = 0.0, spec_seed: int = 0):
         self.model = model
         # the model the jitted bodies trace through: ``model`` here; the
         # tensor-parallel subclass swaps in its per-shard local model
@@ -144,12 +187,45 @@ class ContinuousBatchingEngine:
         self.n_slots = n_slots
         self.chunk_steps = chunk_steps
         self.rules = rules
+        self.spec_k = int(spec_k)
+        self.speculative = self.spec_k > 0
+        if self.speculative and draft_model is None:
+            raise ValueError("spec_k > 0 needs draft_model/draft_params")
+        self.draft_model = draft_model
+        # like ``compute_model`` but for the draft: the tensor-parallel
+        # subclass keeps the draft replicated (every shard runs the full
+        # small model), so this stays ``draft_model`` there too
+        self.draft_compute_model = draft_model
+        self.draft_params = draft_params
+        self.temperature = float(temperature)
+        self.spec_seed = spec_seed
+        if (self.speculative and
+                draft_model.cfg.vocab_size != model.cfg.vocab_size):
+            raise ValueError(
+                f"draft vocab {draft_model.cfg.vocab_size} != target "
+                f"vocab {model.cfg.vocab_size}")
         self.host_syncs = 0            # decode-chunk device->host syncs
+        # speculative accounting (host-accumulated, reset per serve):
+        # rounds/proposed/accepted over live slots, prefill token counts
+        self.spec_stats = self._zero_spec_stats()
         self._prefill_slot = jax.jit(self._prefill_slot_impl,
-                                     donate_argnums=(1,))
+                                     donate_argnums=(2,))
         self._decode_chunk = jax.jit(self._decode_chunk_impl,
                                      donate_argnums=(1,))
+        self._spec_chunk = jax.jit(self._spec_chunk_impl,
+                                   donate_argnums=(2,))
         self.reset()
+
+    @staticmethod
+    def _zero_spec_stats() -> dict:
+        return {"rounds": 0, "proposed": 0, "accepted": 0, "emitted": 0,
+                "draft_fwd": 0, "draft_prefill_tokens": 0,
+                "target_prefill_tokens": 0}
+
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens the target accepted."""
+        return self.spec_stats["accepted"] / max(
+            1, self.spec_stats["proposed"])
 
     # -- device state ---------------------------------------------------
     def reset(self):
@@ -161,32 +237,53 @@ class ContinuousBatchingEngine:
             "tok": jnp.zeros((self.n_slots,), jnp.int32),
             "remaining": jnp.zeros((self.n_slots,), jnp.int32),
         }
+        if self.speculative:
+            self.state["draft_cache"] = self.draft_model.init_cache(
+                self.n_slots, self.max_len, per_slot_pos=True)
+            if self.temperature > 0:
+                self.state["key"] = jax.random.PRNGKey(self.spec_seed)
 
-    def _prefill_slot_impl(self, params, state, tokens, slot, budget):
+    def _prefill_slot_impl(self, params, dparams, state, tokens, slot,
+                           budget):
         """Prefill one prompt and splice it into slot ``slot``.
 
         ``tokens``: (1, S) prompt.  The batch-1 prefill cache is
         scattered into batch row ``slot`` of every layer's state (batch
         is axis 1 of the stacked layer trees), the slot's position is
         set to the prompt length, and the first greedy token seeds the
-        decode loop.  Unrelated slots' cache rows are untouched.
+        decode loop.  Unrelated slots' cache rows are untouched.  In
+        speculative mode the draft model prefills the same prompt into
+        its own cache (outside any tensor-parallel context — the draft
+        runs replicated), so drafting starts aligned with the target.
         """
+
+        def splice(cache, logits_and_one):
+            logits, one = logits_and_one
+            layers = jax.tree.map(
+                lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+                    big, small.astype(big.dtype), slot, axis=1),
+                cache["layers"], one["layers"])
+            pos = cache["pos"].at[slot].set(one["pos"].astype(jnp.int32))
+            return {"layers": layers, "pos": pos}
+
         with sharding_ctx(self.rules):
             logits, one = self.compute_model.prefill(
                 params, {"tokens": tokens}, max_len=self.max_len)
-        cache = state["cache"]
-        layers = jax.tree.map(
-            lambda big, small: jax.lax.dynamic_update_slice_in_dim(
-                big, small.astype(big.dtype), slot, axis=1),
-            cache["layers"], one["layers"])
-        pos = cache["pos"].at[slot].set(one["pos"].astype(jnp.int32))
         tok0 = jnp.argmax(logits[0, -1], -1).astype(jnp.int32)
-        return {
-            "cache": {"layers": layers, "pos": pos},
-            "tok": state["tok"].at[slot].set(tok0),
-            "remaining": state["remaining"].at[slot].set(
+        new = dict(
+            state,
+            cache=splice(state["cache"], (logits, one)),
+            tok=state["tok"].at[slot].set(tok0),
+            remaining=state["remaining"].at[slot].set(
                 jnp.maximum(budget - 1, 0)),
-        }, tok0
+        )
+        if self.speculative:
+            with sharding_ctx(None), tp_ctx(None):
+                dlogits, done = self.draft_compute_model.prefill(
+                    dparams, {"tokens": tokens}, max_len=self.max_len)
+            new["draft_cache"] = splice(state["draft_cache"],
+                                        (dlogits, done))
+        return new, tok0
 
     def _decode_chunk_impl(self, params, state):
         """Decode ``chunk_steps`` tokens for every live slot on device.
@@ -213,10 +310,145 @@ class ContinuousBatchingEngine:
             return (cache, tok, remaining, buf)
 
         buf0 = jnp.zeros((self.n_slots, self.chunk_steps), jnp.int32)
-        cache, tok, remaining, buf = jax.lax.fori_loop(
-            0, self.chunk_steps, body,
+        cache, tok, remaining, buf = _bounded_while(
+            self.chunk_steps, lambda st: jnp.any(st[2] > 0), body,
             (state["cache"], state["tok"], state["remaining"], buf0))
-        return {"cache": cache, "tok": tok, "remaining": remaining}, buf
+        return dict(state, cache=cache, tok=tok, remaining=remaining), buf
+
+    def _spec_chunk_impl(self, params, dparams, state):
+        """Run ``chunk_steps`` draft-and-verify rounds fully on device.
+
+        Each round: the draft model decodes ``spec_k`` tokens per slot
+        (replicated, outside any TP context), the target scores the
+        window ``[tok, d_1..d_k]`` in one ``verify_step`` forward, and
+        acceptance commits ``a + 1`` tokens per slot (``a`` accepted
+        drafts plus the bonus/resampled token).  Ragged accepted
+        lengths stay in lockstep via per-slot write offsets into the
+        emitted-token buffer; only the per-slot position advances, so
+        rejected tokens roll back in place.  Inactive slots hold
+        exactly as in the plain chunk (frozen pos/tok; their window
+        writes are garbage the next prefill-into-slot overwrites).
+
+        Returns ``(state, out)``; ``out["buf"]`` is (B, rounds, k+1)
+        with ``out["n_emit"]`` (B, rounds) valid-prefix lengths — the
+        host stitches each slot's tokens from the per-round blocks (a
+        fixed-index block write per round beats a ragged scatter at
+        per-slot offsets).  One host sync fetches it all.
+        """
+        k = self.spec_k
+        b = self.n_slots
+        sampled = self.temperature > 0
+
+        def draft_loop(dcache, tok, key_round):
+            """Draft k tokens per slot with the (replicated) draft.
+
+            Runs k + 1 decode steps: step j processes the token at
+            window offset j (writing its K/V at ``pos + j``) and emits
+            proposal j + 1.  The final step processes d_k purely to
+            fill its cache row — on a fully-accepted window the next
+            round starts past d_k, so its K/V must exist; for
+            partially-accepted slots that row sits beyond the new
+            frontier and the next window write overwrites it.  Its
+            sampled output is discarded.
+            """
+            vp = getattr(self.draft_compute_model, "vp", 0)
+            toks0 = jnp.zeros((b, k + 1), jnp.int32)
+            dlog0 = (jnp.zeros((b, k + 1, vp), jnp.float32) if sampled
+                     else jnp.zeros((b, k + 1, 1), jnp.float32))
+
+            def step(j, ds):
+                dc, cur, toks, dlog = ds
+                with sharding_ctx(None), tp_ctx(None):
+                    logits, dc = self.draft_compute_model.decode_step(
+                        dparams, dc, cur[:, None])
+                row = logits[:, -1].astype(jnp.float32)
+                if sampled:
+                    nxt = jax.random.categorical(
+                        jax.random.fold_in(key_round, j),
+                        self._mask_pad(row) / self.temperature, axis=-1)
+                    dlog = jax.lax.dynamic_update_slice(
+                        dlog, self._mask_pad(row)[:, None], (0, j, 0))
+                else:
+                    nxt = jnp.argmax(row, axis=-1)
+                nxt = nxt.astype(jnp.int32)
+                toks = jax.lax.dynamic_update_slice(
+                    toks, nxt[:, None], (0, j))
+                return (dc, nxt, toks, dlog)
+
+            dc, _, toks, dlog = jax.lax.fori_loop(
+                0, k + 1, step, (dcache, tok, toks0, dlog0))
+            return dc, toks[:, :k], dlog[:, :k]
+
+        def round_body(i, st):
+            active = st["remaining"] > 0
+            pos0 = st["cache"]["pos"]
+            dpos0 = st["draft_cache"]["pos"]
+            key_round = (jax.random.fold_in(st["key"], i)
+                         if sampled else None)
+            dcache, draft_toks, dlog = draft_loop(
+                st["draft_cache"], st["tok"], key_round)
+            vtoks = jnp.concatenate([st["tok"][:, None], draft_toks],
+                                    axis=1)                   # (B, k+1)
+            with sharding_ctx(self.rules):
+                logits, cache = self.compute_model.verify_step(
+                    params, st["cache"], vtoks)
+            if sampled:
+                acc, out_toks = speculative_sample(
+                    jax.random.fold_in(key_round, k + 1),
+                    self._mask_pad(logits.astype(jnp.float32)), dlog,
+                    draft_toks, self.temperature)
+            else:
+                acc, out_toks = greedy_verify(logits, draft_toks)
+            n_emit = jnp.where(active, acc + 1, 0)
+            new_tok = jnp.take_along_axis(out_toks, acc[:, None],
+                                          axis=1)[:, 0]
+            # fixed-index block write: round i owns buf[:, i, :]
+            buf = jax.lax.dynamic_update_slice(
+                st["buf"], out_toks[:, None], (0, i, 0))
+            new = dict(
+                st,
+                cache=dict(cache, pos=pos0 + n_emit),
+                draft_cache=dict(dcache,
+                                 pos=jnp.where(active, pos0 + n_emit,
+                                               dpos0)),
+                tok=jnp.where(active, new_tok, st["tok"]),
+                remaining=jnp.maximum(st["remaining"] - n_emit, 0),
+                buf=buf,
+                n_emit=jax.lax.dynamic_update_slice(
+                    st["n_emit"], n_emit[:, None], (0, i)),
+                accepted=st["accepted"] + jnp.where(active, acc, 0),
+                proposed=st["proposed"] + active.astype(jnp.int32) * k,
+                draft_fwd=st["draft_fwd"]
+                + active.astype(jnp.int32) * (k + 1),
+            )
+            return new
+
+        zeros = jnp.zeros((b,), jnp.int32)
+        st = dict(state,
+                  buf=jnp.zeros((b, self.chunk_steps, k + 1), jnp.int32),
+                  n_emit=jnp.zeros((b, self.chunk_steps), jnp.int32),
+                  accepted=zeros, proposed=zeros, draft_fwd=zeros)
+        if sampled:
+            key, sub = jax.random.split(state["key"])
+            st["key"] = sub
+        st = _bounded_while(self.chunk_steps,
+                            lambda s: jnp.any(s["remaining"] > 0),
+                            round_body, st)
+        out = {name: st.pop(name)
+               for name in ("buf", "n_emit", "accepted", "proposed",
+                            "draft_fwd")}
+        if sampled:
+            st["key"] = key
+        return st, out
+
+    def _mask_pad(self, logits):
+        """-inf the padded vocab tail before sampling (argmax paths stay
+        unmasked to match the plain engine exactly)."""
+        vocab = self.model.cfg.vocab_size
+        if logits.shape[-1] == vocab:
+            return logits
+        pad = jnp.arange(logits.shape[-1]) >= vocab
+        return jnp.where(pad, -1e30, logits)
 
     # -- host orchestration ---------------------------------------------
     def serve(self, requests: list[Request],
@@ -234,6 +466,8 @@ class ContinuousBatchingEngine:
         drained as fast as slots free up (Offline scenario).
         """
         self.reset()
+        self.spec_stats = self._zero_spec_stats()
+        self.host_syncs = 0            # per-serve, like spec_stats
         queue = collections.deque(
             sorted(requests, key=lambda r: (r.arrival_s, r.rid)))
         slots: list[Optional[Request]] = [None] * self.n_slots
@@ -250,15 +484,27 @@ class ContinuousBatchingEngine:
                     break
                 r = queue.popleft()
                 prompt = jnp.asarray(r.prompt, jnp.int32)[None]
-                assert prompt.shape[1] + r.max_new_tokens <= self.max_len, \
-                    (prompt.shape[1], r.max_new_tokens, self.max_len)
+                # speculative verify windows write up to spec_k rows
+                # past the last decoded position; keep them in-cache
+                assert (prompt.shape[1] + r.max_new_tokens + self.spec_k
+                        <= self.max_len), \
+                    (prompt.shape[1], r.max_new_tokens, self.spec_k,
+                     self.max_len)
                 self.state, tok0 = self._prefill_slot(
-                    self.params, self.state, prompt,
+                    self.params, self.draft_params, self.state, prompt,
                     jnp.asarray(b, jnp.int32),
                     jnp.asarray(r.max_new_tokens, jnp.int32))
                 first = int(tok0)          # blocks -> true TTFT
                 r.first_token_s = now() - t0
                 r.output = [first][: r.max_new_tokens]  # budget 0 -> []
+                if self.speculative:
+                    # the draft prefilled the prompt alongside the target
+                    r.draft_tokens += int(prompt.shape[1])
+                    r.verify_tokens += int(prompt.shape[1])
+                    self.spec_stats["draft_prefill_tokens"] += \
+                        int(prompt.shape[1])
+                    self.spec_stats["target_prefill_tokens"] += \
+                        int(prompt.shape[1])
                 if r.max_new_tokens <= 1:
                     r.done_s = r.first_token_s
                     done.append(r)
@@ -274,17 +520,40 @@ class ContinuousBatchingEngine:
                         sleep(dt)
                 continue
             # one fused multi-token chunk; a single host sync after it
-            self.state, buf = self._decode_chunk(self.params, self.state)
-            buf_np = np.asarray(jax.device_get(buf))
+            if self.speculative:
+                self.state, out = self._spec_chunk(
+                    self.params, self.draft_params, self.state)
+                out = jax.device_get(out)
+                buf_np = np.asarray(out["buf"])      # (B, rounds, k+1)
+                n_emit = np.asarray(out["n_emit"])   # (B, rounds)
+            else:
+                self.state, buf = self._decode_chunk(self.params,
+                                                     self.state)
+                buf_np = np.asarray(jax.device_get(buf))
             self.host_syncs += 1
             t_chunk = now() - t0
             for b in range(self.n_slots):
                 r = slots[b]
                 if r is None:
                     continue
-                take = min(slot_left[b], self.chunk_steps)
-                r.output.extend(int(x) for x in buf_np[b, :take])
+                if self.speculative:
+                    # stitch the slot's tokens from its per-round blocks
+                    toks = [int(x) for i in range(buf_np.shape[1])
+                            for x in buf_np[b, i, :n_emit[b, i]]]
+                else:
+                    toks = [int(x) for x in buf_np[b]]
+                take = min(slot_left[b], len(toks))
+                r.output.extend(toks[:take])
                 slot_left[b] -= take
+                if self.speculative:
+                    rounds_b = int((n_emit[b] > 0).sum())
+                    r.draft_tokens += int(out["draft_fwd"][b])
+                    r.verify_tokens += rounds_b * (self.spec_k + 1)
+                    self.spec_stats["rounds"] += rounds_b
+                    self.spec_stats["proposed"] += int(out["proposed"][b])
+                    self.spec_stats["accepted"] += int(out["accepted"][b])
+                    self.spec_stats["draft_fwd"] += int(out["draft_fwd"][b])
+                    self.spec_stats["emitted"] += take
                 if slot_left[b] == 0:       # retire; slot free to refill
                     r.done_s = t_chunk
                     done.append(r)
@@ -297,28 +566,45 @@ class ContinuousBatchingEngine:
 
 def attribute_request_energy(requests: list[Request],
                              times_s: np.ndarray,
-                             watts: np.ndarray) -> dict[int, float]:
+                             watts: np.ndarray,
+                             weight: Optional[Callable[[Request], float]]
+                             = None) -> dict[int, float]:
     """Split measured system energy across in-flight requests.
 
     ``times_s``/``watts``: the Director's power samples (seconds since
     run start — the same clock the engine stamps requests on).  Each
-    sample interval's energy is divided equally among the requests in
-    flight (arrival <= t < done) during it; idle intervals are dropped.
+    sample interval's energy is divided among the requests in flight
+    (arrival <= t < done) during it; idle intervals are dropped.
     Fills ``Request.energy_j`` and returns {rid: joules}.
+
+    ``weight``: optional per-request weighting, ``r -> float``.  By
+    default every live request gets an equal share of an interval's
+    energy; with a weight the split is proportional, and the shares of
+    an interval still sum to its energy, so the per-request total still
+    equals the measured busy-window total.  Speculative serving uses
+    this to bill draft-model forwards to the request that triggered
+    them (``r.draft_tokens`` scaled by the draft/target FLOP ratio) —
+    without it a request with a low acceptance rate would be
+    under-billed and per-request energy would no longer reflect what
+    the fleet actually burned on it.
     """
     times_s = np.asarray(times_s, float)
     watts = np.asarray(watts, float)
     per: dict[int, float] = {r.rid: 0.0 for r in requests}
-    spans = [(r.rid, r.arrival_s, r.done_s) for r in requests
+    w_of = ((lambda r: 1.0) if weight is None
+            else (lambda r: max(float(weight(r)), 1e-12)))
+    spans = [(r.rid, r.arrival_s, r.done_s, w_of(r)) for r in requests
              if r.done_s is not None]
     for i in range(len(times_s) - 1):
         t_lo, t_hi = times_s[i], times_s[i + 1]
         e = watts[i] * (t_hi - t_lo)
-        live = [rid for rid, a, d in spans if a < t_hi and d > t_lo]
+        live = [(rid, w) for rid, a, d, w in spans
+                if a < t_hi and d > t_lo]
         if not live:
             continue
-        for rid in live:
-            per[rid] += e / len(live)
+        w_sum = sum(w for _, w in live)
+        for rid, w in live:
+            per[rid] += e * w / w_sum
     for r in requests:
         r.energy_j = per.get(r.rid)
     return per

@@ -101,38 +101,61 @@ class ShardedContinuousBatchingEngine(ContinuousBatchingEngine):
         rules = make_tp_rules(cfg, mesh, axis)
         self._param_specs = param_pspecs(model.param_defs(), rules)
         self._cache_specs = model.cache_pspecs(rules, per_slot_pos=True)
-        self._state_specs = {"cache": self._cache_specs,
-                             "tok": P(), "remaining": P()}
         if kw.get("rules") is not None:
             raise ValueError("ShardedContinuousBatchingEngine manages its "
                              "own sharding; rules must be None")
         super().__init__(model, params, **kw)
         # the shard-local body traces through the per-shard model; the
-        # global ``self.model`` keeps defining the (full) cache layout
+        # global ``self.model`` keeps defining the (full) cache layout.
+        # The draft (if any) stays replicated: ``draft_compute_model``
+        # is the full draft, run per shard outside the TP context.
         self.compute_model = type(model)(local_cfg)
+        # draft weights are replicated onto every shard; so is the
+        # draft cache / sampling key — everything in the state except
+        # the target cache, whose specs partition it by KV head
+        self._dparam_specs = jax.tree.map(lambda _: P(),
+                                          self.draft_params)
+        self._state_specs = dict(
+            jax.tree.map(lambda _: P(), self.state),
+            cache=self._cache_specs)
 
-    def _shard_mapped(self, base_impl, n_extra: int):
+    def _shard_mapped(self, base_impl, in_specs, out_specs):
         """Wrap a base engine body in shard_map: params and cache enter
         partitioned (weights by head/FFN column, cache by KV head),
-        scalars/tokens replicated; outputs are device-invariant by
-        construction (every row-parallel projection ends in a psum)."""
+        scalars/tokens/draft state replicated; outputs are
+        device-invariant by construction (every row-parallel projection
+        ends in a psum; the draft model runs fully replicated)."""
 
-        def local_fn(params, state, *extra):
+        def local_fn(*args):
             with tp_ctx(self.tp_axis):
-                return base_impl(params, state, *extra)
+                return base_impl(*args)
 
-        return shard_map(
-            local_fn, mesh=self.mesh,
-            in_specs=(self._param_specs, self._state_specs) +
-                     (P(),) * n_extra,
-            out_specs=(self._state_specs, P()),
-            check_rep=False)
+        return shard_map(local_fn, mesh=self.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
 
-    def _prefill_slot_impl(self, params, state, tokens, slot, budget):
+    def _prefill_slot_impl(self, params, dparams, state, tokens, slot,
+                           budget):
         base = super()._prefill_slot_impl
-        return self._shard_mapped(base, 3)(params, state, tokens, slot,
-                                           budget)
+        return self._shard_mapped(
+            base,
+            in_specs=(self._param_specs, self._dparam_specs,
+                      self._state_specs) + (P(),) * 3,
+            out_specs=(self._state_specs, P()),
+        )(params, dparams, state, tokens, slot, budget)
 
     def _decode_chunk_impl(self, params, state):
         base = super()._decode_chunk_impl
-        return self._shard_mapped(base, 0)(params, state)
+        return self._shard_mapped(
+            base,
+            in_specs=(self._param_specs, self._state_specs),
+            out_specs=(self._state_specs, P()),
+        )(params, state)
+
+    def _spec_chunk_impl(self, params, dparams, state):
+        base = super()._spec_chunk_impl
+        return self._shard_mapped(
+            base,
+            in_specs=(self._param_specs, self._dparam_specs,
+                      self._state_specs),
+            out_specs=(self._state_specs, P()),
+        )(params, dparams, state)

@@ -1,0 +1,136 @@
+"""Speculative decoding: acceptance math and draft-model constructors.
+
+The engine drafts ``k`` tokens per slot with a small draft model, then
+scores the whole window in one target forward (``LM.verify_step``).
+This module holds the pure acceptance/rejection math it applies to the
+two models' logits — all vectorized over slots so ragged batches stay
+in lockstep on device:
+
+- ``greedy_verify``: temperature-0 acceptance.  A draft token is
+  accepted iff it equals the target argmax; the emitted tokens are the
+  target argmaxes themselves, so greedy speculative output is
+  *token-identical* to plain greedy decode for any draft (CI gates on
+  this).
+- ``speculative_sample``: the Leviathan/Chen rejection sampler.  Draft
+  token ``d_i`` is accepted with probability ``min(1, p(d_i)/q(d_i))``;
+  the first rejected position resamples from ``max(p - q, 0)``
+  (normalized) and a fully-accepted window samples a bonus token from
+  the target's last-position distribution.  The emitted-token marginal
+  is exactly the target distribution (the chi-squared golden test
+  checks this).
+- ``truncate_draft``: a LayerSkip-style self-speculative draft — the
+  target's first ``n_layers`` blocks with shared embeddings/norm/head.
+  No second checkpoint needed, and vocabulary agreement is free.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy_verify(target_logits: jax.Array, draft_tokens: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Temperature-0 acceptance.
+
+    ``target_logits``: (B, k+1, V) — target scores for the window
+    ``[tok, d_1..d_k]``; ``draft_tokens``: (B, k).  Returns
+    ``(accepted, out_tokens)`` where ``accepted`` (B,) in ``[0, k]`` is
+    the matched-prefix length and ``out_tokens`` (B, k+1) holds the
+    target argmaxes — positions ``[0, accepted]`` are the tokens to
+    emit (accepted drafts plus the bonus token after them).
+    """
+    tgt = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)
+    match = (tgt[:, :-1] == draft_tokens).astype(jnp.int32)
+    accepted = jnp.cumprod(match, axis=1).sum(axis=1)
+    return accepted, tgt
+
+
+def speculative_sample(key: jax.Array, target_logits: jax.Array,
+                       draft_logits: jax.Array, draft_tokens: jax.Array,
+                       temperature: float = 1.0
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Rejection-sample a draft window against the target distribution.
+
+    ``target_logits``: (B, k+1, V); ``draft_logits``: (B, k, V);
+    ``draft_tokens``: (B, k) sampled from the draft distribution.
+    Returns ``(accepted, out_tokens)`` with the same contract as
+    ``greedy_verify``: emit ``out_tokens[:, :accepted+1]`` — the
+    accepted draft tokens followed by one resampled (or bonus) token.
+    Every emitted token is marginally distributed per the target model.
+    """
+    b, k1, v = target_logits.shape
+    k = k1 - 1
+    t = max(float(temperature), 1e-6)
+    p = jax.nn.softmax(target_logits.astype(jnp.float32) / t, axis=-1)
+    q = jax.nn.softmax(draft_logits.astype(jnp.float32) / t, axis=-1)
+    p_d = jnp.take_along_axis(p[:, :k], draft_tokens[..., None],
+                              axis=-1)[..., 0]                # (B, k)
+    q_d = jnp.take_along_axis(q, draft_tokens[..., None],
+                              axis=-1)[..., 0]
+    k_u, k_r = jax.random.split(key)
+    u = jax.random.uniform(k_u, (b, k))
+    accept = u < p_d / jnp.maximum(q_d, 1e-20)
+    accepted = jnp.cumprod(accept.astype(jnp.int32), axis=1).sum(axis=1)
+    # Residual distribution at the first rejected position; a fully
+    # accepted window appends a zero draft row so the residual is the
+    # target's bonus distribution p[k] unchanged.
+    q_pad = jnp.concatenate([q, jnp.zeros_like(p[:, :1])], axis=1)
+    idx = accepted[:, None, None]
+    p_at = jnp.take_along_axis(p, idx, axis=1)[:, 0]          # (B, V)
+    q_at = jnp.take_along_axis(q_pad, idx, axis=1)[:, 0]
+    resid = jnp.maximum(p_at - q_at, 0.0)
+    norm = resid.sum(axis=-1, keepdims=True)
+    resid = jnp.where(norm > 0, resid / jnp.maximum(norm, 1e-20), p_at)
+    resample = jax.random.categorical(
+        k_r, jnp.log(jnp.maximum(resid, 1e-38)), axis=-1).astype(jnp.int32)
+    out = jnp.concatenate(
+        [draft_tokens, jnp.zeros((b, 1), jnp.int32)], axis=1)
+    out = jnp.where(jnp.arange(k1)[None, :] == accepted[:, None],
+                    resample[:, None], out)
+    return accepted, out
+
+
+def truncate_draft(model, params, n_layers: int = 2):
+    """Build a self-speculative draft: the target's first ``n_layers``
+    blocks with shared embeddings, final norm and LM head (LayerSkip-
+    style early exit).  Returns ``(draft_model, draft_params)``.  The
+    embedding/norm/head arrays are shared with the target; the sliced
+    block stack (``a[:n_layers]``) materializes its own copy of the
+    kept layers' weights, so budget roughly ``n_layers / n_total`` of
+    the target's block memory for the draft.
+    """
+    cfg = model.cfg
+    if cfg.family != "dense":
+        raise ValueError(
+            f"truncate_draft needs a homogeneous dense stack; "
+            f"{cfg.name} is family={cfg.family}")
+    if not 0 < n_layers <= cfg.n_layers:
+        raise ValueError(f"n_layers={n_layers} not in 1..{cfg.n_layers}")
+    dcfg = dataclasses.replace(cfg, n_layers=n_layers,
+                               name=f"{cfg.name}-draft{n_layers}")
+    dmodel = type(model)(dcfg)
+    dparams = dict(params)
+    dparams["blocks"] = jax.tree.map(lambda a: a[:n_layers],
+                                     params["blocks"])
+    return dmodel, dparams
+
+
+def damp_upper_layers(params, n_keep: int, damp: float = 0.02):
+    """Scale down the residual output projections of layers past
+    ``n_keep``.  Used by the speculative smoke benchmark to construct a
+    high-acceptance draft/target pair from random weights: with the
+    upper layers damped, the ``n_keep``-layer truncated draft agrees
+    with the full target almost always — standing in for the
+    distilled draft a real deployment would train.  Returns new params
+    (the target keeps its full depth and per-token cost).
+    """
+    blocks = dict(params["blocks"])
+    n_layers = jax.tree.leaves(blocks)[0].shape[0]
+    scale = jnp.where(jnp.arange(n_layers) < n_keep, 1.0, damp)
+    for grp, name in (("attn", "wo"), ("ffn", "w_down")):
+        sub = dict(blocks[grp])
+        sub[name] = sub[name] * scale[:, None, None]
+        blocks[grp] = sub
+    return dict(params, blocks=blocks)

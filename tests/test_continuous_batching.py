@@ -90,8 +90,8 @@ def test_slot_refill_preserves_other_slots():
                                    chunk_steps=2)
     p0 = jnp.asarray(np.arange(8))[None].astype(jnp.int32)
     p1 = jnp.asarray(np.arange(6) + 40)[None].astype(jnp.int32)
-    state, _ = eng._prefill_slot(eng.params, eng.state, p0,
-                                 jnp.asarray(0, jnp.int32),
+    state, _ = eng._prefill_slot(eng.params, eng.draft_params, eng.state,
+                                 p0, jnp.asarray(0, jnp.int32),
                                  jnp.asarray(5, jnp.int32))
 
     def snap_slot(state, b):
@@ -103,8 +103,8 @@ def test_slot_refill_preserves_other_slots():
     before = snap_slot(state, 0)
     # refill a *different* slot mid-flight (donated state: snapshot
     # above copies to host first)
-    state, _ = eng._prefill_slot(eng.params, state, p1,
-                                 jnp.asarray(1, jnp.int32),
+    state, _ = eng._prefill_slot(eng.params, eng.draft_params, state,
+                                 p1, jnp.asarray(1, jnp.int32),
                                  jnp.asarray(4, jnp.int32))
     after = snap_slot(state, 0)
     jax.tree.map(np.testing.assert_array_equal, before[0], after[0])

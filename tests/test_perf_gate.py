@@ -1,0 +1,199 @@
+"""CI perf-regression gate logic: an injected >=20% tok/s regression
+must fail the build, machine-speed drift must not."""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "scripts"))
+from perf_gate import compare, flatten, main  # noqa: E402
+
+BASE = {
+    "serving": {
+        "fixed": {"tokens_per_s": 1000.0, "tok_per_j": 50.0,
+                  "us_per_tok": 1000.0},
+        "continuous": {"tokens_per_s": 1500.0, "tok_per_j": 75.0,
+                       "us_per_tok": 660.0},
+        "speedup": 1.5,
+        "qps": 200.0,
+        "chunk_syncs": 25,
+    },
+    "scale": {
+        "tp1": {"tokens_per_s": 1700.0, "tok_per_j": 100.0, "chips": 1},
+        "tp4": {"tokens_per_s": 90.0, "tok_per_j": 1.2, "chips": 4},
+    },
+}
+
+
+def test_identical_metrics_pass():
+    failures, _ = compare(copy.deepcopy(BASE), BASE)
+    assert failures == []
+
+
+def test_injected_20pct_tok_s_regression_fails_the_gate():
+    cur = copy.deepcopy(BASE)
+    cur["serving"]["continuous"]["tokens_per_s"] *= 0.80
+    cur["serving"]["speedup"] *= 0.80
+    failures, _ = compare(cur, BASE)
+    assert any("serving.continuous.tokens_per_s" in f for f in failures)
+    assert any("serving.speedup" in f for f in failures)
+
+
+def test_tok_per_j_regression_fails_too():
+    cur = copy.deepcopy(BASE)
+    cur["serving"]["continuous"]["tok_per_j"] *= 0.7
+    failures, _ = compare(cur, BASE)
+    assert any("serving.continuous.tok_per_j" in f for f in failures)
+
+
+def test_scale_group_has_a_wider_noise_floor():
+    """Virtual-mesh scale points gate at a documented wider tolerance:
+    a 20% dip there is within measured noise, a 40% collapse is not."""
+    cur = copy.deepcopy(BASE)
+    cur["scale"]["tp4"]["tok_per_j"] *= 0.8
+    failures, _ = compare(cur, BASE)
+    assert failures == []
+    cur["scale"]["tp4"]["tok_per_j"] = BASE["scale"]["tp4"]["tok_per_j"] * 0.6
+    failures, _ = compare(cur, BASE)
+    assert any("scale.tp4.tok_per_j" in f for f in failures)
+
+
+def test_small_drift_within_tolerance_passes():
+    cur = copy.deepcopy(BASE)
+    for point in ("fixed", "continuous"):
+        cur["serving"][point]["tokens_per_s"] *= 0.95
+    failures, _ = compare(cur, BASE)
+    assert failures == []
+
+
+def test_uniform_machine_slowdown_is_normalized_away():
+    """A 2x slower CI machine halves every rate including the
+    calibration workload — not a regression."""
+    cur = copy.deepcopy(BASE)
+    for grp in cur.values():
+        for point in grp.values():
+            if isinstance(point, dict):
+                for key in ("tokens_per_s", "tok_per_j"):
+                    if key in point:
+                        point[key] *= 0.5
+    failures, notes = compare(cur, BASE)
+    assert failures == []
+    assert any("0.50x the baseline machine" in n for n in notes)
+
+
+def test_relative_regression_survives_normalization():
+    """Same slow machine, but the continuous engine regressed 25% on
+    top of it: normalization must still expose it."""
+    cur = copy.deepcopy(BASE)
+    for grp in cur.values():
+        for point in grp.values():
+            if isinstance(point, dict):
+                for key in ("tokens_per_s", "tok_per_j"):
+                    if key in point:
+                        point[key] *= 0.5
+    cur["serving"]["continuous"]["tokens_per_s"] *= 0.75
+    failures, _ = compare(cur, BASE)
+    assert any("serving.continuous.tokens_per_s" in f for f in failures)
+
+
+def test_calibration_workload_regression_hits_its_raw_floor():
+    """A *collapse* confined to the calibration metric cannot hide
+    behind normalization: it fails its own raw floor.  The floor is
+    deliberately very loose — a slower CI runner (raw wall-clock is
+    machine-specific) stays a note, not a failure."""
+    cur = copy.deepcopy(BASE)
+    cur["serving"]["fixed"]["tokens_per_s"] *= 0.2   # 5x collapse
+    failures, _ = compare(cur, BASE)
+    assert any("serving.fixed.tokens_per_s" in f and "raw floor" in f
+               for f in failures)
+    # a plausible machine-speed difference stays a note, not a failure
+    cur2 = copy.deepcopy(BASE)
+    cur2["serving"]["fixed"]["tokens_per_s"] *= 0.45
+    failures2, _ = compare(cur2, BASE)
+    assert not any("raw floor" in f for f in failures2)
+
+
+def test_speedup_ratio_is_not_rescaled_by_machine_speed():
+    """Ratios are machine-independent; only their own drop may fail."""
+    cur = copy.deepcopy(BASE)
+    cur["serving"]["fixed"]["tokens_per_s"] *= 2.0   # calibration 2x
+    failures, _ = compare(cur, BASE)
+    assert not any("speedup" in f for f in failures)
+
+
+def test_missing_and_new_metrics_are_notes_not_failures():
+    cur = copy.deepcopy(BASE)
+    del cur["scale"]["tp4"]                    # e.g. no virtual devices
+    cur["scale"]["r2"] = {"tokens_per_s": 1400.0, "tok_per_j": 50.0}
+    failures, notes = compare(cur, BASE)
+    assert failures == []
+    assert any("missing in current run: scale.tp4" in n for n in notes)
+    assert any("not in baseline yet: scale.r2" in n for n in notes)
+    assert any("refresh" in n for n in notes)
+
+
+def test_flatten_addresses_leaves_with_dotted_paths():
+    flat = flatten(BASE)
+    assert flat["serving.continuous.tokens_per_s"] == 1500.0
+    assert flat["scale.tp4.chips"] == 4.0
+
+
+def test_cli_fails_build_on_regression(tmp_path, monkeypatch):
+    """The CLI path: exit 1 on an injected regression, 0 when clean —
+    with the benchmark collection stubbed out."""
+    import perf_gate
+
+    baseline = tmp_path / "smoke.json"
+    baseline.write_text(json.dumps(BASE))
+    cur = copy.deepcopy(BASE)
+    cur["serving"]["continuous"]["tokens_per_s"] *= 0.80
+    monkeypatch.setattr(perf_gate, "collect", lambda smoke=True: cur)
+    assert main(["--smoke", "--baseline", str(baseline)]) == 1
+    monkeypatch.setattr(perf_gate, "collect",
+                        lambda smoke=True: copy.deepcopy(BASE))
+    assert main(["--smoke", "--baseline", str(baseline)]) == 0
+
+
+def test_cli_missing_baseline_prints_refresh_and_fails(tmp_path,
+                                                       monkeypatch,
+                                                       capsys):
+    import perf_gate
+
+    monkeypatch.setattr(perf_gate, "collect",
+                        lambda smoke=True: copy.deepcopy(BASE))
+    rc = main(["--smoke", "--baseline", str(tmp_path / "nope.json")])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "--update-baseline" in out
+
+
+def test_cli_update_baseline_writes_file(tmp_path, monkeypatch):
+    import perf_gate
+
+    monkeypatch.setattr(perf_gate, "collect",
+                        lambda smoke=True: copy.deepcopy(BASE))
+    baseline = tmp_path / "smoke.json"
+    assert main(["--smoke", "--baseline", str(baseline),
+                 "--update-baseline"]) == 0
+    assert json.loads(baseline.read_text()) == BASE
+    # and the freshly written baseline gates clean
+    assert main(["--smoke", "--baseline", str(baseline)]) == 0
+
+
+def test_committed_baseline_is_valid_json_with_gated_metrics():
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "baselines", "smoke.json")
+    with open(path) as f:
+        base = json.load(f)
+    flat = flatten(base)
+    assert "serving.fixed.tokens_per_s" in flat      # calibration key
+    assert "serving.continuous.tok_per_j" in flat
+    assert all(v > 0 for k, v in flat.items()
+               if k.endswith(("tokens_per_s", "tok_per_j")))
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])
