@@ -21,9 +21,9 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (accuracy_cost, efficiency_trends,
-                            energy_per_inference, power_range,
-                            quantization_efficiency, roofline_table,
-                            scale_sweep, scaling_energy,
+                            energy_per_inference, power_breakdown,
+                            power_range, quantization_efficiency,
+                            roofline_table, scale_sweep, scaling_energy,
                             serving_throughput, speculative_efficiency,
                             sw_hw_optimizations, tiny_edge_measured)
 
@@ -40,6 +40,7 @@ def main(argv=None) -> None:
         ("serving_throughput", serving_throughput),
         ("scale_sweep", scale_sweep),
         ("speculative_efficiency", speculative_efficiency),
+        ("power_breakdown", power_breakdown),
     ]
     print("name,us_per_call,derived")
     n_rows = 0

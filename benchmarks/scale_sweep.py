@@ -57,8 +57,6 @@ def _warm(engine, cfg):
 
 
 def _run_once(sut, n_queries):
-    from repro.core.analyzer import AnalyzerSpec, VirtualAnalyzer
-    from repro.core.director import Director
     from repro.harness import PowerRun, Server
 
     scenario = Server(
@@ -68,13 +66,9 @@ def _run_once(sut, n_queries):
         min_queries=n_queries,
         mode="queue",
     )
-    # sample at 1 kHz so the energy window resolves each point's
-    # sub-second duration
-    director = Director(
-        analyzer=VirtualAnalyzer(AnalyzerSpec(sample_hz=1000.0), seed=0),
-        seed=0,
-    )
-    return PowerRun(sut, scenario, seed=0, director=director).run()
+    # sample every meter-stack channel at 1 kHz so the energy window
+    # resolves each point's sub-second duration
+    return PowerRun(sut, scenario, seed=0, sample_hz=1000.0).run()
 
 
 def _measure_points(suts, n_queries):

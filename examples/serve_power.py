@@ -88,6 +88,9 @@ def main():
           f"{r.samples_per_joule:.4f} samples/J, "
           f"{m.total_tokens / max(r.summary.energy_j, 1e-9):.3f} tok/J, "
           f"per-request mean {e.mean():.2f} J")
+    # the meter stack's per-domain split: DC rails vs the wall boundary
+    print("per-domain: " + ", ".join(
+        f"{k}={v:.1f} J" for k, v in sorted(r.per_domain_energy_j.items())))
     print(r.report.render())
 
 

@@ -57,8 +57,20 @@ CALIBRATIONS = {
 # 1-device serving workloads even after interleaved best-of + tp1
 # normalization; their gate tolerance floor reflects that
 GROUP_TOL_FLOOR = {"scale": 0.30}
-# only rate-like leaves are gated; counters/shares are informational
-GATED_SUFFIXES = ("tokens_per_s", "tok_per_j", "speedup")
+# only rate-like leaves are gated; counters/shares are informational.
+# meter_samples_per_s guards the multi-channel metering path itself
+# (channel-samples produced per second of metering wall time): extra
+# stack channels or a de-vectorized analyzer error model would show up
+# here long before they distort the serving numbers
+GATED_SUFFIXES = ("tokens_per_s", "tok_per_j", "speedup",
+                  "meter_samples_per_s")
+# pure-numpy metrics are NOT normalized by the (JAX-bound) calibration
+# workload — the numpy:JAX speed ratio varies across machines
+# independently, so cross-normalizing would fail healthy runners.
+# They get their own loose raw floor instead: the failure mode being
+# guarded (a de-vectorized analyzer loop) is a ~100x collapse, not a
+# 30% drift
+RAW_FLOOR_SUFFIXES = {"meter_samples_per_s": 0.7}
 REFRESH_CMD = ("PYTHONPATH=src python scripts/perf_gate.py --smoke "
                "--update-baseline")
 
@@ -137,8 +149,13 @@ def compare(current: dict, baseline: dict, tol: float = 0.15,
                          f"(environment difference?)")
             continue
         group = name.split(".", 1)[0]
-        scale = scales.get(group, 1.0)
-        m_tol = max(tol, GROUP_TOL_FLOOR.get(group, 0.0))
+        raw_floor = next((f for sfx, f in RAW_FLOOR_SUFFIXES.items()
+                          if name.endswith(sfx)), None)
+        if raw_floor is not None:
+            scale, m_tol = 1.0, raw_floor
+        else:
+            scale = scales.get(group, 1.0)
+            m_tol = max(tol, GROUP_TOL_FLOOR.get(group, 0.0))
         want = base[name] * (scale if _is_rate(name) else 1.0)
         got = cur[name]
         if got < want * (1.0 - m_tol):

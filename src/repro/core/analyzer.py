@@ -39,8 +39,11 @@ class VirtualAnalyzer:
     """Samples ``source(t) -> watts``; the physics behind ``source`` is
     the analytical power model (or a replayed waveform)."""
 
-    def __init__(self, spec: AnalyzerSpec = AnalyzerSpec(), seed: int = 0):
-        self.spec = spec
+    def __init__(self, spec: Optional[AnalyzerSpec] = None, seed: int = 0):
+        # a default constructed per instance: a shared default-argument
+        # AnalyzerSpec instance would leak range/spec mutations across
+        # every analyzer constructed without an explicit spec
+        self.spec = spec if spec is not None else AnalyzerSpec()
         self.rng = np.random.default_rng(seed)
         self.fixed_range: Optional[float] = None
         self.warnings: list[str] = []
@@ -76,15 +79,24 @@ class VirtualAnalyzer:
         n = max(2, int(duration_s * self.spec.sample_hz))
         t = np.arange(n) / self.spec.sample_hz
         true_w = np.asarray(source(t), dtype=np.float64)
-        meas = np.empty_like(true_w)
-        for i, w in enumerate(true_w):
-            rng_w = self._range_for(w)
-            autorange_penalty = 1.0 if self.fixed_range is not None else 2.0
-            gain = self.spec.gain_error * autorange_penalty
-            quant = rng_w / self.spec.counts
-            noise = (w * gain * self.rng.standard_normal()
-                     + self.spec.offset_error_w * self.rng.standard_normal())
-            meas[i] = np.round((w + noise) / quant) * quant
+        # vectorized error model (a MeterStack samples many channels
+        # per run; a per-sample Python loop would dominate metering
+        # overhead): per-sample range selection, gain+offset noise,
+        # quantization by the selected range
+        if self.fixed_range is not None:
+            rng_w = np.full(n, self.fixed_range)
+            autorange_penalty = 1.0
+        else:
+            ranges = np.asarray(self.spec.ranges_w, dtype=np.float64)
+            idx = np.minimum(np.searchsorted(ranges, true_w),
+                             len(ranges) - 1)
+            rng_w = ranges[idx]
+            autorange_penalty = 2.0            # autorange: coarser error
+        gain = self.spec.gain_error * autorange_penalty
+        quant = rng_w / self.spec.counts
+        noise = (true_w * gain * self.rng.standard_normal(n)
+                 + self.spec.offset_error_w * self.rng.standard_normal(n))
+        meas = np.round((true_w + noise) / quant) * quant
         if float(np.mean(true_w)) < 75.0:
             self.warnings.append(
                 "mean power < 75 W: high crest-factor error possible "
@@ -108,8 +120,10 @@ class TelemetrySpec:
 class NodeTelemetry:
     """Per-node software telemetry (IPMI / Redfish semantics)."""
 
-    def __init__(self, spec: TelemetrySpec = TelemetrySpec(), seed: int = 0):
-        self.spec = spec
+    def __init__(self, spec: Optional[TelemetrySpec] = None, seed: int = 0):
+        # per-instance default (same shared-mutable-default bug class
+        # as VirtualAnalyzer's spec)
+        self.spec = spec if spec is not None else TelemetrySpec()
         self.rng = np.random.default_rng(seed)
 
     def measure_nodes(self, node_sources: dict[str, Callable],

@@ -11,6 +11,15 @@ the measurement rules and produces a review report:
   R6  estimation methodologies disclosed for any estimated component
   R7  energy consistency: avg power within declared system envelope
   R8  range-mode (two-pass) used for analyzer measurements < 75 W
+
+Multi-domain submissions (``repro.power.MeterStack`` logs carry
+per-channel domain metadata) additionally get the cross-domain
+invariants:
+
+  R9  wall >= sum of DC rails (the PSU only ever *adds* loss)
+  R10 wall == sum of rails / eta(load) within the channels' error
+      model (needs the stack's PSU model; skipped without one)
+  R11 PDU aggregation equals the sum of its member wall feeds
 """
 from __future__ import annotations
 
@@ -20,6 +29,9 @@ from typing import Optional
 import numpy as np
 
 from repro.core.mlperf_log import LogEvent, find_window
+from repro.core.summarizer import _trapz
+
+RAIL_KINDS = ("accelerator", "dram", "host")
 
 MIN_DURATION_S = 60.0
 MIN_SAMPLE_HZ = {"tiny": 1000.0, "edge": 1.0, "datacenter": 0.5}
@@ -65,10 +77,148 @@ class ReviewReport:
         return "\n".join(lines)
 
 
+def _channel_series(power_events: list[LogEvent], start_ms: float,
+                    stop_ms: float) -> dict:
+    """Per-channel in-window series + domain metadata.
+
+    Returns ``{node: dict(t_s, w, energy_j, kind, group, boundary,
+    derived)}``; channels whose samples carry no domain ``kind`` are
+    legacy single-source logs and get ``kind=None``.
+    """
+    raw: dict[str, dict] = {}
+    for ev in power_events:
+        if ev.key != "power_w":
+            continue
+        md = ev.metadata or {}
+        node = md.get("node", "sut")
+        ch = raw.setdefault(node, {
+            "samples": [], "kind": md.get("kind"),
+            "group": md.get("group", ""),
+            "boundary": bool(md.get("boundary", True)),
+            "source": str(md.get("source", "")),
+            "derived": str(md.get("source", "")).startswith("derived:"),
+        })
+        ch["samples"].append((ev.time_ms, float(ev.value)))
+    out = {}
+    for node, ch in raw.items():
+        ch["samples"].sort()
+        t = np.asarray([s[0] for s in ch["samples"]]) / 1e3
+        w = np.asarray([s[1] for s in ch["samples"]])
+        sel = (t >= start_ms / 1e3) & (t <= stop_ms / 1e3)
+        t, w = t[sel], w[sel]
+        e = _trapz(w, t) if len(t) > 1 else 0.0
+        out[node] = dict(t_s=t, w=w, energy_j=e, kind=ch["kind"],
+                         group=ch["group"], boundary=ch["boundary"],
+                         source=ch["source"], derived=ch["derived"])
+    return out
+
+
+def _pdu_members(name: str, ch: dict, channels: dict,
+                 meter_stack=None) -> dict:
+    """The wall feeds a PDU actually aggregates: its ``derived_from``
+    list (from the stack, or the ``derived:a+b`` source tag its
+    samples carry) — NOT every wall channel in the log, which would
+    falsely reject a stack carrying an extra standalone wall monitor
+    or a second PDU over a disjoint replica subset."""
+    members: tuple = ()
+    if meter_stack is not None:
+        try:
+            members = meter_stack.channel(name).domain.derived_from
+        except KeyError:
+            pass
+    if not members and ch["derived"]:
+        members = tuple(ch["source"][len("derived:"):].split("+"))
+    if members:
+        return {m: channels[m] for m in members if m in channels}
+    return {m: c for m, c in channels.items() if c["kind"] == "wall"}
+
+
+def _domain_checks(channels: dict, meter_stack=None) -> list[Check]:
+    """The cross-domain invariants (R9-R11) for MeterStack logs."""
+    checks: list[Check] = []
+    if not any(ch["kind"] for ch in channels.values()):
+        return checks                   # legacy logs: no domain metadata
+
+    # per-channel analyzer gain errors -> measurement slack
+    def _gain(node):
+        if meter_stack is None:
+            return 0.002
+        try:
+            m = meter_stack.channel(node)
+        except KeyError:
+            return 0.002
+        return m.analyzer.spec.gain_error if m.analyzer else 0.0
+
+    groups = sorted({ch["group"] for ch in channels.values()
+                     if ch["kind"] in RAIL_KINDS})
+    for g in groups:
+        rails = {n: ch for n, ch in channels.items()
+                 if ch["group"] == g and ch["kind"] in RAIL_KINDS}
+        walls = {n: ch for n, ch in channels.items()
+                 if ch["group"] == g and ch["kind"] == "wall"}
+        if not rails or not walls:
+            continue
+        label = f"group {g!r}" if g else "wall"
+        e_rails = sum(ch["energy_j"] for ch in rails.values())
+        e_wall = sum(ch["energy_j"] for ch in walls.values())
+        slack = 3 * (max(_gain(n) for n in walls)
+                     + max(_gain(n) for n in rails)) + 0.01
+        checks.append(Check(
+            "R9 wall-geq-rails",
+            e_wall >= e_rails * (1.0 - slack),
+            f"{label}: wall {e_wall:.3f} J vs sum-of-rails "
+            f"{e_rails:.3f} J (PSU loss can only add)"))
+        psu = getattr(meter_stack, "psu", None)
+        if psu is None:
+            checks.append(Check(
+                "R10 psu-consistency", True,
+                f"{label}: no PSU model documented (skipped)"))
+            continue
+        lens = {len(ch["t_s"]) for ch in rails.values()} | \
+            {len(ch["t_s"]) for ch in walls.values()}
+        if len(lens) != 1:
+            checks.append(Check(
+                "R10 psu-consistency", False,
+                f"{label}: channels not on one timeline "
+                f"(sample counts {sorted(lens)})"))
+            continue
+        dc = np.sum([ch["w"] for ch in rails.values()], axis=0)
+        t_s = next(iter(walls.values()))["t_s"]
+        e_expect = (_trapz(psu.wall_watts(dc), t_s)
+                    if len(t_s) > 1 else 0.0)
+        tol = max(0.025, slack)
+        rel = abs(e_wall - e_expect) / max(e_expect, 1e-12)
+        checks.append(Check(
+            "R10 psu-consistency", rel <= tol,
+            f"{label}: wall {e_wall:.3f} J vs rails/eta "
+            f"{e_expect:.3f} J ({rel * 100:.2f}% vs tol "
+            f"{tol * 100:.1f}%)"))
+
+    pdus = {n: ch for n, ch in channels.items() if ch["kind"] == "pdu"}
+    for n, ch in sorted(pdus.items()):
+        feeds = _pdu_members(n, ch, channels, meter_stack)
+        if not feeds:
+            checks.append(Check("R11 pdu-aggregation", False,
+                                f"{n}: no member wall feeds logged"))
+            continue
+        e_feeds = sum(c["energy_j"] for c in feeds.values())
+        # a derived PDU register is the exact sum of its feeds; an
+        # independently metered PDU gets the error-model slack
+        tol = 1e-9 if ch["derived"] else \
+            3 * max(_gain(m) for m in feeds) + 0.01
+        rel = abs(ch["energy_j"] - e_feeds) / max(e_feeds, 1e-12)
+        checks.append(Check(
+            "R11 pdu-aggregation", rel <= tol,
+            f"{n}: {ch['energy_j']:.3f} J vs sum of "
+            f"{len(feeds)} wall feeds {e_feeds:.3f} J"))
+    return checks
+
+
 def review(perf_events: list[LogEvent], power_events: list[LogEvent],
            sysdesc: SystemDescription, *,
            min_duration_s: float = MIN_DURATION_S,
-           range_mode_used: bool = True) -> ReviewReport:
+           range_mode_used: bool = True,
+           meter_stack=None) -> ReviewReport:
     checks: list[Check] = []
     start_ms, stop_ms = find_window(perf_events)
     window_s = (stop_ms - start_ms) / 1e3
@@ -130,10 +280,23 @@ def review(perf_events: list[LogEvent], power_events: list[LogEvent],
                 " (all documented)" if sysdesc.estimated_components
         else "no estimated components"))
 
-    w = [float(ev.value) for ev in power_events if ev.key == "power_w"
-         and start_ms <= ev.time_ms <= stop_ms]
+    # R7 compares against the declared full-system envelope, so only
+    # the *boundary* channels (wall / pdu / pin) count — summing the
+    # breakdown rails on top would double-count the wall.  Samples
+    # without domain metadata keep the legacy all-nodes semantics.
+    w = []
+    boundary_nodes = set()
+    for ev in power_events:
+        if ev.key != "power_w" or not (start_ms <= ev.time_ms <= stop_ms):
+            continue
+        md = ev.metadata or {}
+        if not bool(md.get("boundary", True)):
+            continue
+        w.append(float(ev.value))
+        boundary_nodes.add(md.get("node", "sut"))
     if w and sysdesc.max_system_watts:
-        avg = float(np.mean(w)) * (n_nodes if len(nodes) > 1 else 1)
+        avg = float(np.mean(w)) * (len(boundary_nodes)
+                                   if len(boundary_nodes) > 1 else 1)
         envelope_ok = (sysdesc.idle_system_watts * 0.5 <= avg
                        <= sysdesc.max_system_watts * 1.1)
         checks.append(Check("R7 consistency", envelope_ok,
@@ -149,4 +312,7 @@ def review(perf_events: list[LogEvent], power_events: list[LogEvent],
                             "sub-75W device: fixed ranges required"))
     else:
         checks.append(Check("R8 range-mode", True, "not applicable"))
+
+    channels = _channel_series(power_events, start_ms, stop_ms)
+    checks.extend(_domain_checks(channels, meter_stack))
     return ReviewReport(checks)

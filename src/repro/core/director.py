@@ -1,15 +1,19 @@
 """Director / SUT orchestration (edge & datacenter inference, §IV-B).
 
 The Director (server) NTP-syncs with the SUT (client), starts the PTD
-(power-thermal daemon) session against the analyzer, commands the SUT
-to run loadgen, collects both logs, and hands them to the summarizer.
-Everything runs in-process here, but the protocol steps, clock-offset
-correction, and the two-pass range mode are the real ones.
+(power-thermal daemon) session against the *meter stack* — every
+channel of a ``repro.power.MeterStack``, driven as one unit on the
+shared NTP-corrected timeline with per-channel two-pass ranging —
+commands the SUT to run loadgen, collects both logs, and hands them to
+the summarizer.  Everything runs in-process here, but the protocol
+steps, clock-offset correction, and the range mode are the real ones.
 
 This is protocol plumbing: benchmarks and examples should not wire
 ``Director.run_measurement`` closures by hand — the public entry point
 is ``repro.harness.PowerRun``, which composes the Director protocol
 with a loadgen scenario, the summarizer, and the compliance review.
+A scalar ``power_source`` is still accepted and wrapped into a
+single-channel wall-only stack (the pre-domain API).
 """
 from __future__ import annotations
 
@@ -37,18 +41,30 @@ class NTPSync:
 
 @dataclasses.dataclass
 class PTDSession:
-    """Power-Thermal Daemon API facade around the analyzer."""
+    """Power-Thermal Daemon API facade.
 
-    analyzer: VirtualAnalyzer
+    Historically wrapped one analyzer; it now fronts a whole
+    ``MeterStack`` (SPEC PTDaemon's multi-channel mode).  ``analyzer``
+    is kept as the legacy single-channel form — it is treated as a
+    wall-only stack.
+    """
+
+    analyzer: Optional[VirtualAnalyzer] = None
+    stack: Optional[object] = None            # repro.power.MeterStack
     connected: bool = False
 
-    def connect(self):
+    def connect(self) -> dict:
         self.connected = True
+        if self.stack is not None:
+            return {"channels": self.stack.describe()}
         return {"device": self.analyzer.spec.name,
                 "spec_approved": self.analyzer.spec.spec_approved}
 
-    def set_range(self, watts: float):
-        self.analyzer.fixed_range = watts
+    def set_range(self, watts: float, channel: Optional[str] = None):
+        if self.stack is not None:
+            self.stack.set_range(watts, channel)
+        elif self.analyzer is not None:
+            self.analyzer.fixed_range = watts
 
     def start_logging(self):
         assert self.connected, "PTD not connected"
@@ -70,35 +86,50 @@ class Director:
     def run_measurement(
         self, *,
         sut_run: Callable[[MLPerfLogger], float],
-        power_source: Callable[[np.ndarray], np.ndarray],
+        power_source: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+        meter_stack=None,
         range_mode: bool = True,
         probe_duration_s: float = 5.0,
     ) -> tuple[MLPerfLogger, MLPerfLogger]:
-        """Full protocol: NTP sync -> PTD connect -> (range probe) ->
-        loadgen run with concurrent power logging.
+        """Full protocol: NTP sync -> PTD connect -> (per-channel range
+        probe) -> loadgen run with concurrent power logging.
 
         ``sut_run(perf_log) -> duration_s`` executes the workload and
         writes run_start/run_stop + results into the perf log (in SUT
-        clock).  ``power_source(t) -> watts`` is the SUT's power draw.
+        clock).  The measured system is either a ``meter_stack``
+        (multi-channel power domains) or — legacy form — a scalar
+        ``power_source(t) -> watts``, which is wrapped into a
+        single-channel wall-only stack around the session's analyzer.
 
         Each call starts fresh perf/power logs, so one Director session
         can be reused across measurements without the runs' windows and
         samples bleeding into each other.
         """
+        if (power_source is None) == (meter_stack is None):
+            raise ValueError(
+                "run_measurement takes exactly one of power_source= "
+                "(legacy scalar) or meter_stack=")
+        if meter_stack is None:
+            from repro.power.stack import single_source_stack
+
+            meter_stack = single_source_stack(power_source, self.analyzer)
         self.perf_log = MLPerfLogger("perf")
         self.power_log = MLPerfLogger("power")
         offset = NTPSync().sync(self.rng)
         self.clock_offset_ms = offset
+        self.ptd = PTDSession(self.analyzer, meter_stack)
         self.ptd.connect()
         if range_mode:
-            self.analyzer.range_probe(power_source, probe_duration_s)
+            # two-pass mode: every channel pins the smallest range
+            # covering its own observed peak (not the stack peak)
+            meter_stack.range_probe(probe_duration_s)
         self.ptd.start_logging()
         duration = sut_run(self.perf_log)
-        # analyzer samples in Director clock; correct by the sync offset
-        self.analyzer.measure(power_source, duration,
-                              t0_ms=-offset, logger=self.power_log)
+        # all channels sample in Director clock on one shared timeline;
+        # correct by the sync offset
+        meter_stack.measure(duration, t0_ms=-offset,
+                            logger=self.power_log)
         self.ptd.stop_logging()
         # shift power samples into SUT clock for the summarizer
-        for ev in self.power_log.events:
-            ev.time_ms += offset
+        meter_stack.shift_clock(self.power_log, offset)
         return self.perf_log, self.power_log

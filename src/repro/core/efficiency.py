@@ -22,6 +22,10 @@ class Submission:
     samples_per_second: float
     avg_watts: float
     accuracy_target: Optional[float] = None
+    # multi-domain submissions: average watts per measured power
+    # domain (accelerator / dram / host / wall / pdu / pin); the
+    # boundary domains are what avg_watts totals
+    per_domain_watts: Optional[dict] = None
 
     @property
     def samples_per_joule(self) -> float:
@@ -30,6 +34,14 @@ class Submission:
     @property
     def joules_per_sample(self) -> float:
         return self.avg_watts / self.samples_per_second
+
+    def domain_samples_per_joule(self) -> dict:
+        """Per-domain efficiency: what the throughput costs on each
+        rail (the paper's per-component attribution view)."""
+        if not self.per_domain_watts:
+            return {}
+        return {k: self.samples_per_second / w
+                for k, w in self.per_domain_watts.items() if w > 0}
 
 
 def normalized_trend(subs: list[Submission]) -> dict[str, list]:

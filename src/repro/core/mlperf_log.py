@@ -53,10 +53,15 @@ class MLPerfLogger:
 
     def power_sample(self, time_ms: float, watts: float, *,
                      node: str = "sut", volts: float = 0.0,
-                     amps: float = 0.0, source: str = "analyzer"):
-        return self.log("power_w", watts, time_ms,
-                        {"node": node, "volts": volts, "amps": amps,
-                         "source": source})
+                     amps: float = 0.0, source: str = "analyzer",
+                     extra: Optional[dict] = None):
+        """``extra`` carries channel metadata (domain kind/group and
+        the ``boundary`` flag) the summarizer and compliance key on."""
+        md = {"node": node, "volts": volts, "amps": amps,
+              "source": source}
+        if extra:
+            md.update(extra)
+        return self.log("power_w", watts, time_ms, md)
 
     def result(self, key: str, value: Any, time_ms: float, **meta):
         return self.log(key, value, time_ms, meta)

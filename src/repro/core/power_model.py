@@ -90,19 +90,54 @@ class SystemPowerModel:
              + work.ici_bytes * self.chip.e_ici_byte)
         return e / t
 
-    def system_watts(self, work: Optional[StepWork],
-                     step_s: Optional[float] = None,
-                     host_active: bool = True) -> float:
-        """Full-system average power during execution (or idle)."""
+    def rail_watts(self, work: Optional[StepWork],
+                   step_s: Optional[float] = None,
+                   host_active: bool = True) -> dict[str, float]:
+        """DC-side power per domain rail (pre-PSU): the per-component
+        breakdown behind the wall boundary.
+
+        - ``accelerator``: chip static + compute/ICI dynamic power,
+        - ``dram``: the HBM rail (bytes moved x J/byte),
+        - ``host``: host CPUs/fans/NICs plus interconnect switches.
+
+        ``sum(rail_watts(...).values()) / psu_efficiency`` equals
+        ``system_watts(...)`` exactly — the wall is the rails through
+        the PSU, never an independent fourth component.
+        """
         s = self.system
-        chips_w = self.n_chips * self.chip.idle_watts
+        acc_w = self.n_chips * self.chip.idle_watts
+        dram_w = 0.0
         if work is not None:
-            chips_w += self.n_chips * self.dynamic_chip_watts(work, step_s)
+            t = step_s or self.step_time(work)
+            e_core = ((work.flops - work.flops_int8) * self.chip.e_flop_bf16
+                      + work.flops_int8 * self.chip.e_flop_int8
+                      + work.ici_bytes * self.chip.e_ici_byte)
+            acc_w += self.n_chips * e_core / t
+            dram_w = self.n_chips * work.hbm_bytes * self.chip.e_hbm_byte / t
         hosts = s.n_hosts(self.n_chips)
         host_w = hosts * (s.host_active_watts if host_active and work
                           else s.host_idle_watts)
-        switch_w = s.n_switches(self.n_chips) * s.switch_watts
-        return (chips_w + host_w + switch_w) / s.psu_efficiency
+        host_w += s.n_switches(self.n_chips) * s.switch_watts
+        return {"accelerator": acc_w, "dram": dram_w, "host": host_w}
+
+    def psu(self):
+        """The PSU loss model linking these rails to the wall domain
+        (flat efficiency — bit-compatible with ``system_watts``)."""
+        from repro.power.psu import PSUModel
+
+        s = self.system
+        rated = (self.n_chips * self.chip.peak_watts
+                 + s.n_hosts(self.n_chips) * s.host_active_watts
+                 + s.n_switches(self.n_chips) * s.switch_watts)
+        return PSUModel(rated_watts=rated, efficiency=s.psu_efficiency)
+
+    def system_watts(self, work: Optional[StepWork],
+                     step_s: Optional[float] = None,
+                     host_active: bool = True) -> float:
+        """Full-system average power during execution (or idle): the
+        wall boundary (sum of the DC rails through the PSU)."""
+        rails = self.rail_watts(work, step_s, host_active)
+        return sum(rails.values()) / self.system.psu_efficiency
 
     # ------------------------------------------------------------------
     def trace(self, work: StepWork, *, duration_s: float,

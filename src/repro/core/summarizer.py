@@ -2,9 +2,13 @@
 
 Implements the paper's §IV-C pipeline: find the run_start/run_stop
 window in the performance log, select the power samples inside it
-(per node), trapezoidally integrate each node's power over the window,
-sum across nodes (+ documented switch estimates) for energy-to-train,
-and derive the unified efficiency metrics of §IV-A:
+(per channel), trapezoidally integrate each channel's power over the
+window, and derive the unified efficiency metrics of §IV-A.  Channels
+are either *boundary* domains (wall / pdu / pin — what the submission
+totals) or per-component breakdown rails (accelerator / dram / host)
+reported per node but never double-counted into the total; samples
+without domain metadata keep the legacy sum-over-nodes semantics
+(+ documented switch estimates) for energy-to-train:
 
   throughput benchmarks: Samples/s, Watts, Samples/Joule
   latency benchmarks (tiny): energy per inference, 1/Joules
@@ -39,6 +43,19 @@ class EnergySummary:
     inv_joules: Optional[float] = None          # tiny metric (1/J)
     switch_energy_j: float = 0.0
     notes: tuple = ()
+    # multi-domain runs: which channels *are* the submission total
+    # (wall/pdu/pin); per_node_j keeps every channel's breakdown
+    boundary_nodes: tuple = ()
+
+    @property
+    def per_domain_j(self) -> dict:
+        """Alias: per-channel energies (breakdown + boundary)."""
+        return self.per_node_j
+
+    def domain_watts(self) -> dict:
+        """Average watts per channel over the window."""
+        w = max(self.window_s, 1e-12)
+        return {k: v / w for k, v in self.per_node_j.items()}
 
 
 def summarize(perf_events: list[LogEvent], power_events: list[LogEvent],
@@ -47,11 +64,19 @@ def summarize(perf_events: list[LogEvent], power_events: list[LogEvent],
     window_s = (stop_ms - start_ms) / 1e3
 
     by_node: dict[str, list[tuple[float, float]]] = defaultdict(list)
+    node_boundary: dict[str, bool] = {}
     for ev in power_events:
         if ev.key != "power_w":
             continue
-        node = (ev.metadata or {}).get("node", "sut")
+        md = ev.metadata or {}
+        node = md.get("node", "sut")
         by_node[node].append((ev.time_ms, float(ev.value)))
+        # a channel marked boundary=False is a per-component breakdown
+        # inside another channel's boundary: report it per-node, but
+        # never sum it into the total (that would double-count the
+        # wall).  Samples without the flag (single-source logs, multi-
+        # node training logs) keep the legacy sum-over-nodes semantics.
+        node_boundary.setdefault(node, bool(md.get("boundary", True)))
 
     per_node_j = {}
     n_samples = 0
@@ -65,7 +90,9 @@ def summarize(perf_events: list[LogEvent], power_events: list[LogEvent],
             per_node_j[node] = 0.0
             continue
         per_node_j[node] = _trapz(w[sel], t[sel] / 1e3)
-    energy = float(sum(per_node_j.values()))
+    boundary_nodes = tuple(sorted(n for n, b in node_boundary.items()
+                                  if b))
+    energy = float(sum(per_node_j[n] for n in boundary_nodes))
 
     notes = []
     switch_j = 0.0
@@ -86,7 +113,7 @@ def summarize(perf_events: list[LogEvent], power_events: list[LogEvent],
         avg_watts=energy / max(window_s, 1e-12),
         per_node_j=dict(per_node_j), n_samples=n_samples,
         samples_processed=processed, switch_energy_j=switch_j,
-        notes=tuple(notes))
+        notes=tuple(notes), boundary_nodes=boundary_nodes)
     if processed:
         summary.samples_per_second = processed / window_s
         summary.samples_per_joule = processed / energy

@@ -6,10 +6,14 @@ contribution): wrap any system behind the ``SUT`` protocol, pick a
 
     result = PowerRun(sut, scenario).run()
 
-runs loadgen + Director protocol + summarizer + compliance review and
-returns a ``SubmissionResult`` (metrics, Joules, review report, an
-``efficiency.Submission`` for trend analyses, and per-request energy
-when the SUT keeps request records).
+runs loadgen + Director protocol (driving the SUT's multi-channel
+``MeterStack`` — per-domain instruments, per-channel ranging, one
+shared timeline) + summarizer + compliance review (including the
+cross-domain wall-vs-rails invariants) and returns a
+``SubmissionResult``: metrics, total Joules, per-domain energy and
+efficiency, the review report, an ``efficiency.Submission`` for trend
+analyses, and per-request energy (total and per domain) when the SUT
+keeps request records.
 
     from repro.harness import (CallableSUT, PowerRun, SingleStream,
                                MultiStream, Offline, Server)
@@ -18,11 +22,18 @@ when the SUT keeps request records).
     res = PowerRun(sut, SingleStream()).run()
     assert res.passed
     print(res.render())
+    print(res.per_domain_energy_j)       # {"wall": ...} per channel
+
+Migration note: the scalar ``SUT.power_source(outcome)`` surface is
+deprecated.  Adapters now declare ``domains(outcome) ->
+list[repro.power.PowerDomain]`` (or override ``meter_stack``); a SUT
+that only provides ``power_source`` is wrapped into a single-domain
+wall-only stack with a ``DeprecationWarning``.
 """
 from repro.harness.sut import (  # noqa: F401
     SUT, BaseSUT, CallableSUT, ContinuousBatchingSUT, ReplicatedSUT,
-    ServeEngineSUT, ShardedSUT, TinySUT, constant_power,
-    throughput_watts,
+    ServeEngineSUT, ShardedSUT, TinySUT, constant_power, rail_domains,
+    throughput_watts, throughput_work,
 )
 from repro.harness.scenarios import (  # noqa: F401
     SCENARIOS, MultiStream, Offline, Scenario, ScenarioOutcome, Server,
@@ -30,4 +41,7 @@ from repro.harness.scenarios import (  # noqa: F401
 )
 from repro.harness.power_run import (  # noqa: F401
     PowerRun, SubmissionResult, analyzer_for_scale,
+)
+from repro.power import (  # noqa: F401
+    MeterStack, PowerDomain, PSUModel, build_stack,
 )

@@ -3,22 +3,33 @@
 Composes the full paper methodology around one scenario execution:
 
 1. run the scenario against the SUT (``repro.core.loadgen``),
-2. Director protocol — NTP sync, PTD connect, two-pass range probe,
-   concurrent power logging (``repro.core.director``),
-3. summarizer window extraction + trapezoidal energy integration
-   (``repro.core.summarizer``),
-4. compliance review against the submission rules
-   (``repro.core.compliance``),
-5. an ``efficiency.Submission`` record for trend analyses,
-6. per-request energy attribution when the SUT kept request records.
+2. build the SUT's multi-channel ``MeterStack`` (power domains +
+   scale-appropriate instruments, ``repro.power``),
+3. Director protocol — NTP sync, PTD connect, per-channel two-pass
+   range probe, concurrent power logging on one shared timeline
+   (``repro.core.director``),
+4. summarizer window extraction + per-domain trapezoidal energy
+   integration (boundary channels total; rails are the breakdown),
+5. compliance review against the submission rules, including the
+   cross-domain invariants (wall >= sum of rails; wall == rails/eta
+   within the channels' error model),
+6. an ``efficiency.Submission`` record (with per-domain watts) for
+   trend analyses,
+7. per-request energy attribution — total and per domain — when the
+   SUT kept request records.
 
-The analyzer is picked per scale: tiny runs get a µW-class
-I/O-manager-grade instrument (kHz sampling, sub-µW offset error);
-edge/datacenter get the SPEC-approved WT310-class analyzer.
+Instruments are picked per scale when the SUT declares domains: tiny
+pin channels get a µW-class I/O-manager-grade channel (kHz sampling,
+sub-µW offset error); edge gets the SPEC-approved WT310-class
+analyzer; datacenter channels use node telemetry with the documented
+accuracy.  A SUT that only provides the legacy scalar
+``power_source`` is wrapped into a single-channel wall-only stack
+(with a ``DeprecationWarning``).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -31,9 +42,11 @@ from repro.core.loadgen import Clock, QuerySampleLibrary
 from repro.core.mlperf_log import MLPerfLogger
 from repro.core.summarizer import EnergySummary, summarize
 from repro.harness.scenarios import Scenario, ScenarioOutcome
+from repro.power import MeterStack, single_source_stack
 
 # µW-regime instrument: the WT310-class defaults (50 mW offset error,
-# 15 W bottom range) would drown a duty-cycled MCU trace.
+# 15 W bottom range) would drown a duty-cycled MCU trace.  (Kept as a
+# public name; the stack builder's PIN_CHANNEL is the same spec.)
 TINY_ANALYZER = AnalyzerSpec(
     name="virtual-io-manager", sample_hz=2000.0, gain_error=0.001,
     offset_error_w=1e-7, ranges_w=(1e-3, 1e-2, 1e-1, 1.0), counts=60_000)
@@ -56,6 +69,9 @@ class SubmissionResult:
     perf_log: MLPerfLogger
     power_log: MLPerfLogger
     per_request_energy_j: Optional[dict] = None
+    # per-domain views (populated by every MeterStack run)
+    meter_stack: Optional[MeterStack] = None
+    per_request_domain_energy_j: Optional[dict] = None
 
     @property
     def passed(self) -> bool:
@@ -67,9 +83,30 @@ class SubmissionResult:
             return self.summary.samples_per_joule
         return self.submission.samples_per_joule
 
+    @property
+    def per_domain_energy_j(self) -> dict:
+        """Joules per channel (boundary domains + breakdown rails)."""
+        return self.summary.per_domain_j
+
+    @property
+    def per_domain_watts(self) -> dict:
+        """Average watts per channel over the measurement window."""
+        return self.summary.domain_watts()
+
+    def domain_samples_per_joule(self) -> dict:
+        """Per-domain efficiency (what the throughput costs each rail)."""
+        return self.submission.domain_samples_per_joule()
+
     def power_samples(self) -> tuple[np.ndarray, np.ndarray]:
-        """(times_s, watts) from the power log, SUT clock."""
+        """(times_s, watts) of the *boundary* channels (the submission
+        total), SUT clock."""
         return _power_samples(self.power_log)
+
+    def domain_samples(self, domain: str
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """(times_s, watts) of one named channel, SUT clock."""
+        return _power_samples(self.power_log, node=domain,
+                              boundary_only=False)
 
     def render(self) -> str:
         o, s = self.outcome, self.summary
@@ -82,6 +119,11 @@ class SubmissionResult:
             f"({s.avg_watts:.3f} W avg) -> "
             f"{self.samples_per_joule:.4f} samples/J",
         ]
+        if len(s.per_node_j) > 1:
+            split = ", ".join(
+                f"{k}={v:.3f} J" for k, v in sorted(s.per_node_j.items()))
+            lines.append(f"domains: {split} "
+                         f"(boundary: {'+'.join(s.boundary_nodes)})")
         lines.append(self.report.render())
         return "\n".join(lines)
 
@@ -91,8 +133,9 @@ class PowerRun:
 
     ``qsl`` defaults to a 64-sample index library (most SUT adapters
     build their own inputs from the sample index).  Pass a ``director``
-    to reuse a session across runs; otherwise one is created with the
-    scale-appropriate analyzer.
+    to reuse a session across runs; ``sample_hz`` overrides every
+    stack channel's sampling rate together (benchmarks resolving
+    sub-second windows pass 1000.0).
     """
 
     def __init__(self, sut, scenario: Scenario, *,
@@ -100,6 +143,7 @@ class PowerRun:
                  director: Optional[Director] = None,
                  seed: int = 0, range_mode: bool = True,
                  probe_duration_s: float = 5.0,
+                 sample_hz: Optional[float] = None,
                  clock: Optional[Clock] = None,
                  switch_estimate: Optional[dict] = None,
                  workload: Optional[str] = None,
@@ -113,6 +157,7 @@ class PowerRun:
         self.seed = seed
         self.range_mode = range_mode
         self.probe_duration_s = probe_duration_s
+        self.sample_hz = sample_hz
         self.clock = clock
         self.switch_estimate = switch_estimate
         self.workload = workload
@@ -120,13 +165,30 @@ class PowerRun:
         self.system_id = system_id
         self.software_id = software_id
 
+    def _meter_stack(self, outcome, scale: str) -> MeterStack:
+        make = getattr(self.sut, "meter_stack", None)
+        if make is not None:
+            return make(outcome, seed=self.seed,
+                        sample_hz=self.sample_hz)
+        # a bare-protocol SUT with only the scalar surface
+        warnings.warn(
+            f"{getattr(self.sut, 'name', 'sut')}: scalar power_source "
+            f"SUTs are deprecated — provide meter_stack()/domains()",
+            DeprecationWarning, stacklevel=2)
+        analyzer = analyzer_for_scale(scale, self.seed)
+        if self.sample_hz is not None:
+            analyzer.spec = dataclasses.replace(
+                analyzer.spec, sample_hz=self.sample_hz)
+        return single_source_stack(self.sut.power_source(outcome),
+                                   analyzer)
+
     def run(self) -> SubmissionResult:
         outcome = self.scenario.run(self.sut, self.qsl, self.clock)
         sysdesc = self.sut.system_description()
+        stack = self._meter_stack(outcome, sysdesc.scale)
         director = self.director or Director(
             analyzer=analyzer_for_scale(sysdesc.scale, self.seed),
             seed=self.seed)
-        source = self.sut.power_source(outcome)
         dur_s = outcome.result.duration_s
 
         def sut_run(log: MLPerfLogger) -> float:
@@ -137,14 +199,15 @@ class PowerRun:
             return dur_s
 
         perf_log, power_log = director.run_measurement(
-            sut_run=sut_run, power_source=source,
+            sut_run=sut_run, meter_stack=stack,
             range_mode=self.range_mode,
             probe_duration_s=self.probe_duration_s)
         summary = summarize(perf_log.events, power_log.events,
                             switch_estimate=self.switch_estimate)
         report = review(perf_log.events, power_log.events, sysdesc,
                         min_duration_s=self.scenario.min_duration_s,
-                        range_mode_used=self.range_mode)
+                        range_mode_used=self.range_mode,
+                        meter_stack=stack)
         submission = efficiency.Submission(
             version=self.version,
             workload=self.workload or self.sut.name,
@@ -153,25 +216,58 @@ class PowerRun:
             software_id=self.software_id,
             samples_per_second=(summary.samples_per_second
                                 or outcome.result.qps),
-            avg_watts=summary.avg_watts)
+            avg_watts=summary.avg_watts,
+            per_domain_watts=summary.domain_watts())
 
         per_request = None
+        per_request_domain = None
         completed = getattr(self.sut, "completed_requests", lambda: None)()
         if completed:
             from repro.serving import attribute_request_energy
-            times_s, watts = _power_samples(power_log)
             # speculative SUTs weight the split by per-request compute
             # (target tokens + draft forwards); others split equally
             weight = getattr(self.sut, "request_energy_weight", None)
+            # per-channel first: what each request burned on each rail
+            # (sums to the channel's busy energy)
+            per_request_domain = {}
+            for node in sorted(summary.per_node_j):
+                t_d, w_d = _power_samples(power_log, node=node,
+                                          boundary_only=False)
+                per_request_domain[node] = attribute_request_energy(
+                    completed, t_d, w_d, weight=weight)
+            # boundary split last: attribute_request_energy fills
+            # Request.energy_j as a side effect, and the records must
+            # keep the submission-total view, not the last rail's
+            times_s, watts = _power_samples(power_log)
             per_request = attribute_request_energy(completed, times_s,
                                                    watts, weight=weight)
         return SubmissionResult(outcome, summary, report, submission,
-                                perf_log, power_log, per_request)
+                                perf_log, power_log, per_request,
+                                meter_stack=stack,
+                                per_request_domain_energy_j=per_request_domain)
 
 
-def _power_samples(power_log: MLPerfLogger
+def _power_samples(power_log: MLPerfLogger, *,
+                   node: Optional[str] = None,
+                   boundary_only: bool = True
                    ) -> tuple[np.ndarray, np.ndarray]:
-    pairs = [(ev.time_ms / 1e3, float(ev.value))
-             for ev in power_log.events if ev.key == "power_w"]
+    """(times_s, watts) from the power log, SUT clock.
+
+    By default only *boundary* channels contribute (wall/pdu/pin —
+    the submission total; summing breakdown rails on top would
+    double-count).  ``node`` selects one named channel instead.
+    """
+    pairs = []
+    for ev in power_log.events:
+        if ev.key != "power_w":
+            continue
+        md = ev.metadata or {}
+        if node is not None:
+            if md.get("node", "sut") != node:
+                continue
+        elif boundary_only and not bool(md.get("boundary", True)):
+            continue
+        pairs.append((ev.time_ms / 1e3, float(ev.value)))
+    pairs.sort()
     return (np.asarray([t for t, _ in pairs]),
             np.asarray([w for _, w in pairs]))

@@ -2,10 +2,11 @@
 
 A ``SUT`` is the one surface the harness measures: how to run queries
 (``issue`` / ``issue_batch`` / ``serve_queue``), what the system draws
-while doing it (``power_source``), and what it claims to be
-(``system_description``).  Adapters wrap the repo's engines behind it:
+while doing it (``meter_stack`` — the multi-channel power-domain
+surface), and what it claims to be (``system_description``).  Adapters
+wrap the repo's engines behind it:
 
-- ``CallableSUT`` — plain functions + a power model; the universal
+- ``CallableSUT`` — plain functions + a power figure; the universal
   adapter for analytic workloads and hand-timed jitted calls.
 - ``ServeEngineSUT`` — the fixed-batch ``ServeEngine`` (blocking
   batches; SingleStream / MultiStream / Offline / sync Server).
@@ -13,22 +14,30 @@ while doing it (``power_source``), and what it claims to be
   ``ContinuousBatchingEngine`` behind ``serve_queue`` (queue-driven
   Server with per-request TTFT/TPOT and energy attribution).
 - ``ShardedSUT`` — the tensor-parallel
-  ``ShardedContinuousBatchingEngine``: same queue surface, with the
-  power meter and system description scaled to the ``tp`` chips of the
-  mesh (the datacenter rows of the paper's µW->MW table).
+  ``ShardedContinuousBatchingEngine``: same queue surface, with one
+  accelerator channel *per shard* summed under one wall (the
+  datacenter rows of the paper's µW->MW table).
 - ``ReplicatedSUT`` — N independent engine replicas behind one
-  admission queue: arrivals dispatched round-robin, fleet power is the
-  sum of the replicas' traces, and per-replica energy attribution is
-  exposed for scale accounting.
+  admission queue: arrivals dispatched round-robin, each replica
+  contributes its own meter stack (rails + wall) and the fleet
+  boundary is a PDU domain aggregating the replica walls.
 - ``TinySUT`` — a pin-demarcated duty-cycled MCU workload (the µW end
-  of the paper's range) with a waveform-shaped power source.
+  of the paper's range) measured on the ``pin`` channel.
 
-Every adapter supplies a default ``power_source(outcome)`` so a
-``PowerRun`` needs nothing beyond ``PowerRun(sut, scenario).run()``.
+Power surface: every adapter implements ``domains(outcome) ->
+list[PowerDomain]`` — its per-component measurement boundaries
+(``accelerator`` / ``dram`` / ``host`` DC rails, a ``wall`` boundary
+derived through the PSU loss model, ``pdu`` for fleets, ``pin`` for
+tiny) — and ``BaseSUT.meter_stack`` turns them into a scale-
+appropriate ``repro.power.MeterStack`` that ``PowerRun`` drives
+through the Director.  The legacy scalar ``power_source(outcome)``
+surface still works: a SUT that only provides it is wrapped into a
+single-channel wall-only stack with a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
 import numpy as np
@@ -36,6 +45,8 @@ import numpy as np
 from repro.core.compliance import SystemDescription
 from repro.core.power_model import StepWork, SystemPowerModel, TinyPowerModel
 from repro.hw import EDGE_SYSTEM, SystemSpec
+from repro.power import (ACCELERATOR, PDU, PIN, WALL, MeterStack,
+                         PowerDomain, build_stack, wall_domain)
 
 PowerSource = Callable[[np.ndarray], np.ndarray]
 
@@ -64,9 +75,11 @@ class SUT(Protocol):
         completed records (the ``repro.serving.Request`` contract)."""
         ...
 
-    def power_source(self, outcome) -> PowerSource:
-        """``source(t_s) -> watts`` for the measured run (``outcome``
-        is the ScenarioOutcome, so the trace can be shaped by it)."""
+    def meter_stack(self, outcome, *, seed: int = 0,
+                    sample_hz: Optional[float] = None) -> MeterStack:
+        """The multi-channel meter stack measuring this run
+        (``outcome`` is the ScenarioOutcome, so the domain traces can
+        be shaped by it)."""
         ...
 
     def system_description(self) -> SystemDescription:
@@ -75,7 +88,9 @@ class SUT(Protocol):
 
 class BaseSUT:
     """Concrete base: batch falls back to sequential issue, queue is
-    unsupported, power defaults to a constant analytic draw."""
+    unsupported; the power surface is ``domains(outcome)`` (native
+    multi-channel) with a deprecated scalar ``power_source`` fallback.
+    """
 
     name = "sut"
 
@@ -106,8 +121,38 @@ class BaseSUT:
         attribution; ``None`` when the SUT has no request records."""
         return None
 
+    # --- power surface -------------------------------------------------
+    def domains(self, outcome) -> Optional[list[PowerDomain]]:
+        """Native multi-channel surface: the run's power domains.
+        ``None`` means the adapter only has the legacy scalar source
+        and ``meter_stack`` falls back to the compatibility shim."""
+        return None
+
     def power_source(self, outcome) -> PowerSource:
+        """Legacy scalar surface: ``source(t_s) -> watts``.  Kept for
+        compatibility; prefer ``domains`` / ``meter_stack``."""
         raise NotImplementedError(f"{self.name}: no power source")
+
+    def _psu(self):
+        """PSU loss model documented with the stack (compliance R10);
+        ``None`` when the SUT has no rail decomposition."""
+        return None
+
+    def meter_stack(self, outcome, *, seed: int = 0,
+                    sample_hz: Optional[float] = None) -> MeterStack:
+        doms = self.domains(outcome)
+        psu = self._psu()
+        if doms is None:
+            warnings.warn(
+                f"{self.name}: the scalar power_source surface is "
+                f"deprecated — implement domains()/meter_stack(); "
+                f"wrapping it into a single-domain wall-only "
+                f"MeterStack", DeprecationWarning, stacklevel=2)
+            doms = [wall_domain(self.power_source(outcome))]
+            psu = None
+        return build_stack(doms, self.system_description(), seed=seed,
+                           sample_hz=sample_hz,
+                           name=f"{self.name}-stack", psu=psu)
 
     def system_description(self) -> SystemDescription:
         return self._sysdesc
@@ -117,22 +162,83 @@ def constant_power(watts: float) -> PowerSource:
     return lambda t: np.full_like(np.asarray(t, float), float(watts))
 
 
+def throughput_work(cfg, qps: float) -> StepWork:
+    """Per-second work while serving ``qps`` samples/s of a decoder
+    model: 2 FLOPs/param/sample, weights re-read from HBM at 1/8 byte
+    per FLOP (the roofline-fed recipe all adapters share)."""
+    return StepWork(flops=2.0 * cfg.param_count() * qps,
+                    hbm_bytes=2.0 * cfg.param_count() * qps / 8)
+
+
 def throughput_watts(meter: SystemPowerModel, cfg, qps: float) -> float:
-    """Analytic full-system draw while serving ``qps`` samples/s of a
-    decoder model: 2 FLOPs/param/sample, weights re-read from HBM at
-    1/8 byte per FLOP (the roofline-fed recipe all adapters share)."""
-    return meter.system_watts(StepWork(
-        flops=2.0 * cfg.param_count() * qps,
-        hbm_bytes=2.0 * cfg.param_count() * qps / 8))
+    """Analytic full-system (wall) draw at ``qps`` samples/s."""
+    return meter.system_watts(throughput_work(cfg, qps))
+
+
+def _shaped(idle_w: float, busy_w: float,
+            util: Optional[Callable]) -> PowerSource:
+    """Rail trace: idle floor + utilization share of the busy draw."""
+    if util is None:
+        return constant_power(busy_w)
+
+    def source(t):
+        t = np.asarray(t, float)
+        return idle_w + (busy_w - idle_w) * util(t)
+
+    return source
+
+
+def rail_domains(meter: SystemPowerModel, work: StepWork, *,
+                 util: Optional[Callable] = None,
+                 n_accel_channels: int = 1,
+                 psu=None) -> list[PowerDomain]:
+    """The standard adapter stack: accelerator/dram/host DC rails
+    (utilization-shaped when ``util(t)`` is given) under one measured
+    ``wall`` boundary derived through the system's PSU loss model.
+
+    ``n_accel_channels > 1`` splits the accelerator rail into one
+    channel per shard (``accelerator/0`` ... — tensor-parallel systems
+    meter each chip's rail separately and sum under one wall).
+    ``psu`` overrides the system's flat-efficiency PSU (e.g. a
+    load-dependent ``repro.power.GOLD_CURVE`` loss model).
+    """
+    busy = meter.rail_watts(work)
+    idle = meter.rail_watts(None)
+    rails: list[PowerDomain] = []
+    k = max(1, n_accel_channels)
+    if k == 1:
+        rails.append(PowerDomain(ACCELERATOR, _shaped(
+            idle[ACCELERATOR], busy[ACCELERATOR], util)))
+    else:
+        # Megatron-split shards draw symmetrically: one channel each
+        for i in range(k):
+            rails.append(PowerDomain(
+                f"{ACCELERATOR}/{i}",
+                _shaped(idle[ACCELERATOR] / k, busy[ACCELERATOR] / k,
+                        util),
+                kind=ACCELERATOR))
+    rails.append(PowerDomain("dram", _shaped(idle["dram"], busy["dram"],
+                                             util)))
+    rails.append(PowerDomain("host", _shaped(idle["host"], busy["host"],
+                                             util)))
+    psu = psu or meter.psu()
+    wall = PowerDomain(WALL, psu.wall_source([r.source for r in rails]),
+                       boundary=True)
+    return rails + [wall]
 
 
 class CallableSUT(BaseSUT):
     """Wrap plain functions + a power figure into a SUT.
 
-    ``power`` is a constant in watts or a ``source(t) -> watts`` trace;
-    use ``power_factory(outcome) -> source`` instead when the trace
-    depends on the run's outcome (throughput-shaped draw, request
-    spans, ...).
+    ``power`` is a constant in watts or a ``source(t) -> watts`` trace
+    (measured as a single wall boundary); use
+    ``power_factory(outcome) -> source`` when the trace depends on the
+    run's outcome, or ``domains_factory(outcome) ->
+    list[PowerDomain]`` for a native multi-channel stack (pass ``psu``
+    to document the loss model for the compliance invariants).
+
+    ``power_source=`` is the deprecated pre-domain keyword: accepted,
+    wrapped into a single-domain wall-only stack, and warned about.
     """
 
     def __init__(self, *, name: str = "callable-sut",
@@ -141,13 +247,26 @@ class CallableSUT(BaseSUT):
                  serve_queue: Optional[Callable[[list], list]] = None,
                  power: Any = None,
                  power_factory: Optional[Callable[[Any], PowerSource]] = None,
+                 domains_factory: Optional[Callable[[Any], list]] = None,
+                 psu: Any = None,
+                 power_source: Any = None,
                  sysdesc: Optional[SystemDescription] = None):
         super().__init__(name, sysdesc)
         self._issue = issue
         self._issue_batch = issue_batch
         self._serve_queue = serve_queue
+        if power_source is not None:
+            warnings.warn(
+                f"{self.name}: CallableSUT(power_source=...) is "
+                f"deprecated — pass power= / power_factory= / "
+                f"domains_factory=; wrapping the scalar source into a "
+                f"single-domain wall-only MeterStack",
+                DeprecationWarning, stacklevel=2)
+            power = power if power is not None else power_source
         self._power = power
         self._power_factory = power_factory
+        self._domains_factory = domains_factory
+        self._psu_model = psu
 
     def issue(self, sample: dict) -> float:
         if self._issue is None:
@@ -167,6 +286,16 @@ class CallableSUT(BaseSUT):
     def supports_serve_queue(self) -> bool:
         return self._serve_queue is not None
 
+    def domains(self, outcome) -> Optional[list[PowerDomain]]:
+        if self._domains_factory is not None:
+            return list(self._domains_factory(outcome))
+        if self._power_factory is not None or self._power is not None:
+            return [wall_domain(self.power_source(outcome))]
+        return None
+
+    def _psu(self):
+        return self._psu_model
+
     def power_source(self, outcome) -> PowerSource:
         if self._power_factory is not None:
             return self._power_factory(outcome)
@@ -181,8 +310,10 @@ class ServeEngineSUT(BaseSUT):
 
     ``make_requests(samples) -> list[Request]`` builds the engine's
     batch from loadgen samples; latency is real wall time of
-    ``run_batch``.  Power is the analytic system draw at the measured
-    throughput (same shape as the paper's roofline-fed meter).
+    ``run_batch``.  The meter stack is the analytic system draw at the
+    measured throughput, decomposed into accelerator/dram/host rails
+    under one PSU-derived wall (same roofline-fed recipe as before,
+    now per domain).
     """
 
     def __init__(self, engine, cfg, *, name: str = "serve-engine",
@@ -204,6 +335,13 @@ class ServeEngineSUT(BaseSUT):
         self.engine.run_batch(reqs)
         return time.perf_counter() - t0
 
+    def domains(self, outcome) -> list[PowerDomain]:
+        return rail_domains(self.meter,
+                            throughput_work(self.cfg, outcome.result.qps))
+
+    def _psu(self):
+        return self.meter.psu()
+
     def power_source(self, outcome) -> PowerSource:
         return constant_power(
             throughput_watts(self.meter, self.cfg, outcome.result.qps))
@@ -213,10 +351,10 @@ class ContinuousBatchingSUT(BaseSUT):
     """Slot-based ``ContinuousBatchingEngine`` behind ``serve_queue``.
 
     ``make_request(i, sample, arrival_s) -> Request`` builds each
-    admission-queue entry.  The power source is shaped by engine
+    admission-queue entry.  Every domain trace is shaped by engine
     occupancy (idle floor + per-slot share of the busy draw over the
     completed requests' spans), so per-request energy attribution sees
-    a realistic trace.
+    a realistic trace on every rail.
 
     ``draft``: the draft model's config when the engine decodes
     speculatively.  It switches per-request energy attribution to
@@ -264,22 +402,37 @@ class ContinuousBatchingSUT(BaseSUT):
     def completed_requests(self) -> Optional[list]:
         return self.completed or None
 
-    def power_source(self, outcome) -> PowerSource:
+    def _utilization(self) -> Callable:
+        """Slot occupancy over the completed requests' spans."""
         spans = [(r.arrival_s, r.done_s) for r in self.completed
                  if r.done_s is not None]
-        busy = throughput_watts(self.meter, self.cfg, outcome.result.qps)
-        idle = self.meter.system_watts(None)
         n_slots = self.engine.n_slots
 
-        def source(t):
+        def util(t):
             t = np.asarray(t, float)
             inflight = np.zeros_like(t)
             for a, d in spans:
                 inflight += (t >= a) & (t < d)
-            util = np.minimum(inflight / max(1, n_slots), 1.0)
-            return idle + (busy - idle) * util
+            return np.minimum(inflight / max(1, n_slots), 1.0)
 
-        return source
+        return util
+
+    def _n_accel_channels(self) -> int:
+        return 1
+
+    def domains(self, outcome) -> list[PowerDomain]:
+        return rail_domains(
+            self.meter, throughput_work(self.cfg, outcome.result.qps),
+            util=self._utilization(),
+            n_accel_channels=self._n_accel_channels())
+
+    def _psu(self):
+        return self.meter.psu()
+
+    def power_source(self, outcome) -> PowerSource:
+        busy = throughput_watts(self.meter, self.cfg, outcome.result.qps)
+        idle = self.meter.system_watts(None)
+        return _shaped(idle, busy, self._utilization())
 
 
 def _system_peak_watts(meter: SystemPowerModel) -> float:
@@ -298,10 +451,11 @@ class ShardedSUT(ContinuousBatchingSUT):
     SUT surface.
 
     Identical queue semantics to ``ContinuousBatchingSUT``; the power
-    meter spans the mesh (``n_chips = engine.tp``) and the default
-    system description declares the matching scale and envelope, so
-    ``PowerRun`` picks the scale-appropriate analyzer and the
-    compliance review checks the fleet-level power budget.
+    meter spans the mesh (``n_chips = engine.tp``) with one
+    accelerator channel *per shard* summed under one wall, and the
+    default system description declares the matching scale and
+    envelope, so the stack gets the scale-appropriate instruments and
+    the compliance review checks the fleet-level power budget.
     """
 
     def __init__(self, engine, cfg, *, name: str = "sharded-engine",
@@ -328,6 +482,9 @@ class ShardedSUT(ContinuousBatchingSUT):
                          make_request=make_request, system=system,
                          n_chips=tp, draft=draft, sysdesc=sysdesc)
 
+    def _n_accel_channels(self) -> int:
+        return self.engine.tp
+
 
 class ReplicatedSUT(BaseSUT):
     """N independent engine replicas behind one admission queue.
@@ -336,11 +493,12 @@ class ReplicatedSUT(BaseSUT):
     ``ShardedSUT``); one admission queue dispatches arrivals
     round-robin, each replica serves its share on the shared t=0
     clock, and the completed records merge into one fleet result.
-    The fleet power source is the *sum* of the replicas' own shaped
-    traces (each sees only its requests' spans), so the summarizer
-    integrates true fleet energy and ``replica_energy_j`` splits it
-    back per replica — the attribution test checks the parts sum to
-    the whole.
+    Each replica contributes its whole meter stack under a ``r{i}/``
+    prefix (rails + wall, all non-boundary), and the fleet boundary is
+    a derived ``pdu`` domain summing the replica wall feeds — exactly
+    the paper's PDU-aggregation fallback.  ``replica_energy_j`` splits
+    the fleet energy back per replica, and the attribution test checks
+    the parts sum to the whole.
     """
 
     def __init__(self, replicas: list, *, name: str = "replicated",
@@ -405,7 +563,7 @@ class ReplicatedSUT(BaseSUT):
     def _replica_outcome(self, rep, outcome):
         """The fleet outcome as one replica sees it: the real outcome
         with qps scaled to its share of completed queries, every other
-        field intact (replica power sources may read any of them)."""
+        field intact (replica power surfaces may read any of them)."""
         import dataclasses
 
         frac = (len(rep.completed) / max(1, len(self.completed))
@@ -413,6 +571,41 @@ class ReplicatedSUT(BaseSUT):
         result = dataclasses.replace(outcome.result,
                                      qps=outcome.result.qps * frac)
         return dataclasses.replace(outcome, result=result)
+
+    def domains(self, outcome) -> list[PowerDomain]:
+        doms: list[PowerDomain] = []
+        wall_names: list[str] = []
+        for i, rep in enumerate(self.replicas):
+            rout = self._replica_outcome(rep, outcome)
+            rdoms = rep.domains(rout) if hasattr(rep, "domains") else None
+            if rdoms is None:
+                rdoms = [wall_domain(rep.power_source(rout))]
+            g = f"r{i}"
+            for d in rdoms:
+                doms.append(PowerDomain(
+                    name=f"{g}/{d.name}", source=d.source, kind=d.kind,
+                    group=g, boundary=False,
+                    derived_from=tuple(f"{g}/{n}"
+                                       for n in d.derived_from),
+                    combine=d.combine))
+                if d.kind == WALL:
+                    wall_names.append(f"{g}/{d.name}")
+        # the fleet boundary: a PDU register aggregating the replica
+        # wall feeds (sum of *measured* samples — §IV-C fallback)
+        doms.append(PowerDomain(PDU, derived_from=tuple(wall_names),
+                                boundary=True))
+        return doms
+
+    def _psu(self):
+        # R10 applies the documented PSU to every replica group, so it
+        # is only honest when the replicas share one loss model; a
+        # heterogeneous fleet documents none (R10 skipped, R9/R11
+        # still checked)
+        psus = [getattr(rep, "_psu", lambda: None)()
+                for rep in self.replicas]
+        if psus[0] is not None and all(p == psus[0] for p in psus):
+            return psus[0]
+        return None
 
     def replica_sources(self, outcome) -> list[PowerSource]:
         return [rep.power_source(self._replica_outcome(rep, outcome))
@@ -450,10 +643,10 @@ class TinySUT(BaseSUT):
 
     ``issue`` runs the real jitted forward but reports the *frame
     period* as the query latency — the SingleStream run then models
-    wall time of the 4 Hz detector, and the power source replays the
-    MCU waveform (active burst of ``inference_time`` per frame, sleep
-    floor in between) so the summarizer integrates true duty-cycled
-    energy.
+    wall time of the 4 Hz detector, and the ``pin`` power domain
+    replays the MCU waveform (active burst of ``inference_time`` per
+    frame, sleep floor in between) so the summarizer integrates true
+    duty-cycled energy from the µW-class channel.
     """
 
     def __init__(self, fwd: Callable[[], None], *, macs: float,
@@ -477,6 +670,10 @@ class TinySUT(BaseSUT):
         self.fwd()
         self.real_latencies_s.append(time.perf_counter() - t0)
         return self.period_s
+
+    def domains(self, outcome) -> list[PowerDomain]:
+        return [PowerDomain(PIN, self.power_source(outcome),
+                            boundary=True)]
 
     def power_source(self, outcome) -> PowerSource:
         d = self.model.device

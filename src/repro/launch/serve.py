@@ -12,9 +12,11 @@ summarizer + compliance in one shot.
 - ``--engine continuous``: the slot-based ``ContinuousBatchingEngine``
   (``ContinuousBatchingSUT``) under ``--scenario server`` — the
   Poisson arrival schedule feeds the engine's admission queue
-  asynchronously, the Director samples a utilization-shaped power
-  trace, and every request is attributed its share of the measured
-  Joules (TTFT/TPOT/energy per request, tokens/s and tokens/J).
+  asynchronously, the Director drives the SUT's multi-channel meter
+  stack (utilization-shaped accelerator/dram/host rails under one
+  PSU-derived wall), and every request is attributed its share of the
+  measured Joules (TTFT/TPOT/energy per request, tokens/s and
+  tokens/J, per-domain split).
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
       --reduce --scenario server --engine continuous --qps 8 \
@@ -34,10 +36,11 @@ checkpoint: it reuses the target's first ``--draft-layers`` blocks
 
 Scale axis (the paper's µW -> MW sweep): ``--tp K`` shards the
 continuous engine over a K-way tensor-parallel mesh
-(``ShardedContinuousBatchingEngine`` + ``ShardedSUT``), ``--replicas R``
-runs R independent engines behind one admission queue
-(``ReplicatedSUT``; fleet power = sum of replica traces).  Without
-accelerators, run on virtual host devices:
+(``ShardedContinuousBatchingEngine`` + ``ShardedSUT``, one accelerator
+channel per shard summed under one wall), ``--replicas R`` runs R
+independent engines behind one admission queue (``ReplicatedSUT``;
+the fleet boundary is a PDU domain aggregating the replica wall
+feeds).  Without accelerators, run on virtual host devices:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
@@ -184,12 +187,16 @@ def _serve_continuous(args, cfg, model, params):
     if e.size:
         print(f"  per-request energy: mean {e.mean():.2f} J, "
               f"p90 {np.percentile(e, 90):.2f} J")
+    dom = r.per_domain_energy_j
+    if len(dom) > 1:
+        split = "; ".join(f"{k}={v:.2f}J" for k, v in sorted(dom.items()))
+        print(f"  per-domain energy: {split}")
     if args.replicas > 1:
-        times_s, _ = r.power_samples()
-        per_rep = sut.replica_energy_j(r.outcome, times_s)
+        per_rep = [dom.get(f"r{i}/wall", 0.0)
+                   for i in range(args.replicas)]
         split = "/".join(f"{x:.2f}" for x in per_rep)
-        print(f"  per-replica energy: {split} J "
-              f"(sum {sum(per_rep):.2f} J vs fleet "
+        print(f"  per-replica wall energy: {split} J "
+              f"(sum {sum(per_rep):.2f} J vs fleet PDU "
               f"{r.summary.energy_j:.2f} J)")
 
 

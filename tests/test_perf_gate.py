@@ -116,6 +116,26 @@ def test_calibration_workload_regression_hits_its_raw_floor():
     assert not any("raw floor" in f for f in failures2)
 
 
+def test_meter_overhead_has_its_own_raw_floor():
+    """The pure-numpy metering throughput is NOT normalized by the
+    JAX-bound serving calibration: a faster-JAX machine must not fail
+    a healthy meter, while a de-vectorization-scale collapse must."""
+    base = copy.deepcopy(BASE)
+    base["serving"]["meter_samples_per_s"] = 20e6
+    # 1.3x-JAX machine, numpy unchanged: would fail if cross-normalized
+    cur = copy.deepcopy(base)
+    for point in ("fixed", "continuous"):
+        for key in ("tokens_per_s", "tok_per_j"):
+            cur["serving"][point][key] *= 1.3
+    failures, _ = compare(cur, base)
+    assert not any("meter_samples_per_s" in f for f in failures)
+    # a 20x collapse (de-vectorized sampling loop) trips the floor
+    cur2 = copy.deepcopy(base)
+    cur2["serving"]["meter_samples_per_s"] = 1e6
+    failures2, _ = compare(cur2, base)
+    assert any("meter_samples_per_s" in f for f in failures2)
+
+
 def test_speedup_ratio_is_not_rescaled_by_machine_speed():
     """Ratios are machine-independent; only their own drop may fail."""
     cur = copy.deepcopy(BASE)
