@@ -23,9 +23,10 @@ def main(argv=None) -> None:
     from benchmarks import (accuracy_cost, efficiency_trends,
                             energy_per_inference, power_breakdown,
                             power_range, quantization_efficiency,
-                            roofline_table, scale_sweep, scaling_energy,
-                            serving_throughput, speculative_efficiency,
-                            sw_hw_optimizations, tiny_edge_measured)
+                            resilience, roofline_table, scale_sweep,
+                            scaling_energy, serving_throughput,
+                            speculative_efficiency, sw_hw_optimizations,
+                            tiny_edge_measured)
 
     modules = [
         ("fig2_power_range", power_range),
@@ -41,6 +42,7 @@ def main(argv=None) -> None:
         ("scale_sweep", scale_sweep),
         ("speculative_efficiency", speculative_efficiency),
         ("power_breakdown", power_breakdown),
+        ("resilience", resilience),
     ]
     print("name,us_per_call,derived")
     n_rows = 0

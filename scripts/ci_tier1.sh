@@ -34,3 +34,9 @@ stage harness-smoke python -m examples.tiny_benchmark
 stage sharded-smoke env \
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     python -m benchmarks.scale_sweep --smoke
+
+# 5. chaos smoke: the fault-injection sweep (seeded, modeled) — meter
+#    dropout / replica crash / overload must degrade gracefully
+#    (hardened runs valid, naive runs rejected or dead, never a
+#    plausible-but-wrong number)
+stage chaos-smoke python -m benchmarks.resilience --smoke

@@ -3,7 +3,9 @@
 
 Collects the machine-measured serving numbers (``benchmarks/
 serving_throughput.metrics`` + ``benchmarks/scale_sweep.metrics``) and
-compares them against the committed baseline
+the modeled resilience numbers (``benchmarks/resilience.metrics`` —
+goodput/J under injected faults, deterministic by seed) and compares
+them against the committed baseline
 (``benchmarks/baselines/smoke.json``).  A metric fails the gate when it
 drops more than ``--tol`` (default 15%) below baseline — an injected
 20% tok/s regression fails the build (``tests/test_perf_gate.py``
@@ -61,9 +63,13 @@ GROUP_TOL_FLOOR = {"scale": 0.30}
 # meter_samples_per_s guards the multi-channel metering path itself
 # (channel-samples produced per second of metering wall time): extra
 # stack channels or a de-vectorized analyzer error model would show up
-# here long before they distort the serving numbers
+# here long before they distort the serving numbers.  goodput_per_j is
+# the resilience group's headline (deadline-met queries per Joule under
+# injected faults) — fully modeled + seeded, so it is deterministic
+# across machines and compared raw (the resilience group deliberately
+# has no calibration entry)
 GATED_SUFFIXES = ("tokens_per_s", "tok_per_j", "speedup",
-                  "meter_samples_per_s")
+                  "meter_samples_per_s", "goodput_per_j")
 # pure-numpy metrics are NOT normalized by the (JAX-bound) calibration
 # workload — the numpy:JAX speed ratio varies across machines
 # independently, so cross-normalizing would fail healthy runners.
@@ -89,11 +95,12 @@ def flatten(tree: dict, prefix: str = "") -> dict:
 
 def collect(smoke: bool = True) -> dict:
     """Run the gated benchmarks and return their nested metrics."""
-    from benchmarks import scale_sweep, serving_throughput
+    from benchmarks import resilience, scale_sweep, serving_throughput
 
     return {
         "serving": serving_throughput.metrics(smoke=smoke),
         "scale": scale_sweep.metrics(smoke=smoke),
+        "resilience": resilience.metrics(smoke=smoke),
     }
 
 

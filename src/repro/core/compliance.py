@@ -20,6 +20,16 @@ invariants:
   R10 wall == sum of rails / eta(load) within the channels' error
       model (needs the stack's PSU model; skipped without one)
   R11 PDU aggregation equals the sum of its member wall feeds
+
+Robustness invariants (what a fault the stack could not absorb looks
+like in the log — see ``repro.faults``):
+
+  R12 per-boundary-channel sample coverage >= threshold (default 95%
+      of the channel's own cadence over the window; telemetry dropout
+      the degradation loop failed to re-measure lands here)
+  R13 no clipped samples on boundary channels (a range overload the
+      re-ranging retry failed to cure; clipped samples carry a
+      ``clipped`` flag in the log metadata)
 """
 from __future__ import annotations
 
@@ -97,19 +107,24 @@ def _channel_series(power_events: list[LogEvent], start_ms: float,
             "boundary": bool(md.get("boundary", True)),
             "source": str(md.get("source", "")),
             "derived": str(md.get("source", "")).startswith("derived:"),
+            "sample_hz": md.get("sample_hz"),
         })
-        ch["samples"].append((ev.time_ms, float(ev.value)))
+        ch["samples"].append((ev.time_ms, float(ev.value),
+                              bool(md.get("clipped", False))))
     out = {}
     for node, ch in raw.items():
         ch["samples"].sort()
         t = np.asarray([s[0] for s in ch["samples"]]) / 1e3
         w = np.asarray([s[1] for s in ch["samples"]])
+        clip = np.asarray([s[2] for s in ch["samples"]], bool)
         sel = (t >= start_ms / 1e3) & (t <= stop_ms / 1e3)
-        t, w = t[sel], w[sel]
+        t, w, clip = t[sel], w[sel], clip[sel]
         e = _trapz(w, t) if len(t) > 1 else 0.0
         out[node] = dict(t_s=t, w=w, energy_j=e, kind=ch["kind"],
                          group=ch["group"], boundary=ch["boundary"],
-                         source=ch["source"], derived=ch["derived"])
+                         source=ch["source"], derived=ch["derived"],
+                         sample_hz=ch["sample_hz"],
+                         n_clipped=int(clip.sum()))
     return out
 
 
@@ -214,10 +229,55 @@ def _domain_checks(channels: dict, meter_stack=None) -> list[Check]:
     return checks
 
 
+def _robustness_checks(channels: dict, window_s: float,
+                       coverage_threshold: float) -> list[Check]:
+    """R12/R13: what an unabsorbed metering fault looks like in the log.
+
+    Both apply to *boundary* channels only — they guard the submission
+    total; a degraded breakdown rail is informational, not a validity
+    hazard.  Coverage compares delivered in-window samples against the
+    channel's own cadence (the ``sample_hz`` its samples carry; legacy
+    logs fall back to the median inter-sample step), so a run with
+    telemetry gaps the degradation loop could not re-measure is
+    REJECTED with the shortfall named instead of quietly integrating
+    through the hole.
+    """
+    checks: list[Check] = []
+    for n, ch in sorted(channels.items()):
+        if not ch["boundary"]:
+            continue
+        t = ch["t_s"]
+        if len(t) < 2:
+            checks.append(Check("R12 sample-coverage", False,
+                                f"{n}: {len(t)} in-window samples"))
+            continue
+        hz = ch.get("sample_hz")
+        if not hz:
+            d = np.diff(t)
+            d = d[d > 0]
+            hz = 1.0 / float(np.median(d)) if len(d) else None
+        if hz:
+            expected = window_s * float(hz)
+            coverage = len(t) / max(expected, 1.0)
+            checks.append(Check(
+                "R12 sample-coverage",
+                coverage >= coverage_threshold,
+                f"{n}: {len(t)} samples vs ~{expected:.0f} expected at "
+                f"{float(hz):g} Hz ({min(coverage, 1.0) * 100:.1f}% >= "
+                f"{coverage_threshold * 100:.0f}%)"))
+        nc = ch.get("n_clipped", 0)
+        checks.append(Check(
+            "R13 no-clipping", nc == 0,
+            f"{n}: {nc} clipped samples (range overload not cured by "
+            f"re-ranging)" if nc else f"{n}: no clipped samples"))
+    return checks
+
+
 def review(perf_events: list[LogEvent], power_events: list[LogEvent],
            sysdesc: SystemDescription, *,
            min_duration_s: float = MIN_DURATION_S,
            range_mode_used: bool = True,
+           coverage_threshold: float = 0.95,
            meter_stack=None) -> ReviewReport:
     checks: list[Check] = []
     start_ms, stop_ms = find_window(perf_events)
@@ -315,4 +375,6 @@ def review(perf_events: list[LogEvent], power_events: list[LogEvent],
 
     channels = _channel_series(power_events, start_ms, stop_ms)
     checks.extend(_domain_checks(channels, meter_stack))
+    checks.extend(_robustness_checks(channels, window_s,
+                                     coverage_threshold))
     return ReviewReport(checks)

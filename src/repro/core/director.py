@@ -90,9 +90,16 @@ class Director:
         meter_stack=None,
         range_mode: bool = True,
         probe_duration_s: float = 5.0,
+        fault_injector=None,
+        meter_retry=None,
     ) -> tuple[MLPerfLogger, MLPerfLogger]:
         """Full protocol: NTP sync -> PTD connect -> (per-channel range
         probe) -> loadgen run with concurrent power logging.
+
+        ``fault_injector`` (``repro.faults.FaultInjector``) subjects the
+        stack's channels to the plan's metering hazards; ``meter_retry``
+        (``repro.faults.RetryPolicy``) bounds the stack's re-range /
+        re-measure degradation loop.  Both default to off.
 
         ``sut_run(perf_log) -> duration_s`` executes the workload and
         writes run_start/run_stop + results into the perf log (in SUT
@@ -128,7 +135,8 @@ class Director:
         # all channels sample in Director clock on one shared timeline;
         # correct by the sync offset
         meter_stack.measure(duration, t0_ms=-offset,
-                            logger=self.power_log)
+                            logger=self.power_log,
+                            injector=fault_injector, retry=meter_retry)
         self.ptd.stop_logging()
         # shift power samples into SUT clock for the summarizer
         meter_stack.shift_clock(self.power_log, offset)

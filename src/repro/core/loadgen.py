@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+from collections import Counter
 from typing import Callable, Optional
 
 import numpy as np
@@ -38,11 +39,16 @@ MIN_DURATION_S = 60.0
 def nan_percentile(values: np.ndarray, p: float) -> float:
     """Percentile with the empty-run guard shared by every latency path.
 
-    Empty runs return ``nan`` — with zero samples there is no defensible
+    NaN entries (requests that never produced the timing being ranked,
+    e.g. a shed query's TTFT) are ignored; empty and all-NaN runs
+    return ``nan`` — with zero usable samples there is no defensible
     tie-break between "fastest" and "slowest", so we refuse to invent
-    one rather than raise mid-report.
+    one rather than raise (or warn) mid-report.  A single finite sample
+    is its own percentile for every ``p``.
     """
     values = np.asarray(values, float)
+    if values.size:
+        values = values[~np.isnan(values)]
     if values.size == 0:
         return float("nan")
     return float(np.percentile(values, p))
@@ -102,6 +108,11 @@ class Clock:
         return self.t
 
     def advance(self, dt: float):
+        if dt < 0:
+            raise ValueError(
+                f"Clock.advance({dt!r}): negative dt would run the "
+                f"virtual clock backwards (now={self.t!r}); measurement "
+                f"windows must be monotonic")
         self.t += dt
 
 
@@ -221,9 +232,46 @@ def poisson_arrivals(target_qps: float, *,
     return np.asarray(out)
 
 
+@dataclasses.dataclass(frozen=True)
+class ShedPolicy:
+    """Admission-control load shedding (leaky bucket over arrivals).
+
+    The queue runner models the admission side of overload: the bucket
+    drains at ``drain_qps`` (the rate the fleet can sustain) and holds
+    at most ``max_queue`` outstanding arrivals.  An arrival that finds
+    the bucket full is *shed* — never handed to the engine, counted in
+    ``ServerMetrics.n_shed`` — instead of silently inflating the tail
+    latency of everything behind it.
+    """
+
+    max_queue: int = 64
+    drain_qps: Optional[float] = None   # default: 1.5x the target rate
+
+    def shed_mask(self, arrivals_s: np.ndarray,
+                  target_qps: float) -> np.ndarray:
+        drain = self.drain_qps if self.drain_qps else 1.5 * target_qps
+        level, last = 0.0, 0.0
+        mask = np.zeros(len(arrivals_s), dtype=bool)
+        for i, t in enumerate(arrivals_s):
+            level = max(0.0, level - (float(t) - last) * drain)
+            last = float(t)
+            if level >= self.max_queue:
+                mask[i] = True        # bucket full: shed this arrival
+            else:
+                level += 1.0
+        return mask
+
+
 @dataclasses.dataclass
 class ServerMetrics:
-    """Queue-driven Server-scenario outcome (continuous batching)."""
+    """Queue-driven Server-scenario outcome (continuous batching).
+
+    ``result``/latency stats cover *goodput* — queries completed within
+    their deadline.  The robustness counters make degradation explicit:
+    ``n_admitted`` queries reached the engine, ``n_shed`` were refused
+    at admission (``ShedPolicy``), ``n_timeout`` completed past the
+    per-request deadline and are excluded from the latency stats.
+    """
 
     result: LoadgenResult            # end-to-end latency per query
     slo_met: bool                    # p99 end-to-end <= SLO
@@ -231,6 +279,9 @@ class ServerMetrics:
     tpot_s: np.ndarray               # per-token decode cadence
     total_tokens: int
     tokens_per_s: float
+    n_admitted: int = 0
+    n_shed: int = 0
+    n_timeout: int = 0
 
     def ttft_p(self, p: float) -> float:
         return nan_percentile(self.ttft_s, p)
@@ -245,6 +296,15 @@ class ServerMetrics:
         if self.tpot_s.size == 0:
             return float("nan")
         return float(np.mean(self.tpot_s))
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of offered queries that completed within deadline
+        (goodput over offered load, counting shed + timed-out against)."""
+        offered = self.result.n_queries + self.n_shed + self.n_timeout
+        if offered == 0:
+            return float("nan")
+        return self.result.n_queries / offered
 
 
 def qid_of(sample, fallback: int) -> int:
@@ -262,7 +322,10 @@ def run_server_queue(serve: Callable[[list[tuple[dict, float]]], list],
                      latency_slo_s: float,
                      min_duration_s: float = MIN_DURATION_S,
                      seed: int = 0,
-                     min_queries: int = 32) -> ServerMetrics:
+                     min_queries: int = 32,
+                     deadline_s: Optional[float] = None,
+                     shed: Optional[ShedPolicy] = None,
+                     fault_plan=None) -> ServerMetrics:
     """Server scenario against an asynchronous admission queue.
 
     The whole Poisson arrival schedule is generated up front and handed
@@ -279,24 +342,88 @@ def run_server_queue(serve: Callable[[list[tuple[dict, float]]], list],
     performance sample set), so ``qid``, not the sample index, is what
     request builders must use for request ids: it stays unique when the
     schedule outruns the QSL and when replicas split one queue.
+
+    Robustness knobs (all default off):
+
+    - ``fault_plan`` (``repro.faults.FaultPlan``): any ``QueueOverload``
+      faults splice seeded burst arrivals into the Poisson schedule.
+    - ``shed`` (``ShedPolicy``): overload-triggered load shedding at
+      admission; shed queries never reach ``serve`` and are counted in
+      ``ServerMetrics.n_shed``.
+    - ``deadline_s``: per-request deadline.  Queries completing past it
+      count as ``n_timeout`` and are excluded from the latency/token
+      stats (goodput semantics).
+
+    Query-id conservation is enforced whenever the completed records
+    carry rids (the ``repro.serving.Request`` contract): every
+    admitted qid must come back exactly once.  Duplicate, fabricated,
+    or lost qids raise ``ValueError`` naming the colliding/missing ids
+    — a crashing replica must re-dispatch, not drop or double-serve.
     """
     arrivals = poisson_arrivals(target_qps, min_duration_s=min_duration_s,
                                 seed=seed, min_queries=min_queries)
-    recs = serve([(dict(qsl.sample(i), qid=i), float(a))
-                  for i, a in enumerate(arrivals)])
-    lat = np.asarray([r.done_s - r.arrival_s for r in recs])
-    ttft = np.asarray([r.first_token_s - r.arrival_s for r in recs])
+    times = [float(a) for a in arrivals]
+    if fault_plan is not None:
+        times = sorted(times + [float(b)
+                                for b in fault_plan.burst_arrivals()])
+    queries = [(dict(qsl.sample(i), qid=i), t)
+               for i, t in enumerate(times)]
+
+    n_shed = 0
+    if shed is not None:
+        mask = shed.shed_mask(np.asarray(times), target_qps)
+        n_shed = int(mask.sum())
+        queries = [q for q, drop in zip(queries, mask) if not drop]
+
+    admitted = [int(s["qid"]) for s, _ in queries]
+    dup_admitted = sorted({q for q, c in Counter(admitted).items() if c > 1})
+    if dup_admitted:
+        raise ValueError(
+            f"duplicate qids in admission queue: {dup_admitted} — the "
+            f"query-id space must be unique per run")
+
+    recs = serve(queries)
+
+    rids = [getattr(r, "rid", None) for r in recs]
+    if all(r is not None for r in rids):
+        returned = [int(r) for r in rids]
+        dup = sorted({q for q, c in Counter(returned).items() if c > 1})
+        if dup:
+            raise ValueError(
+                f"qids completed more than once: {dup} — a retried "
+                f"query must be deduplicated, not double-served")
+        extra = sorted(set(returned) - set(admitted))
+        if extra:
+            raise ValueError(
+                f"completed qids never admitted: {extra} — the SUT "
+                f"fabricated or renumbered requests")
+        lost = sorted(set(admitted) - set(returned))
+        if lost:
+            raise ValueError(
+                f"admitted qids never completed: {lost} — a crashed "
+                f"replica's queries must be re-dispatched to survivors")
+
+    n_timeout = 0
+    done = recs
+    if deadline_s is not None:
+        done = [r for r in recs if r.done_s - r.arrival_s <= deadline_s]
+        n_timeout = len(recs) - len(done)
+
+    lat = np.asarray([r.done_s - r.arrival_s for r in done])
+    ttft = np.asarray([r.first_token_s - r.arrival_s for r in done])
     tpot = np.asarray([(r.done_s - r.first_token_s)
                        / max(1, len(r.output) - 1)
-                       for r in recs if len(r.output or []) > 1])
+                       for r in done if len(r.output or []) > 1])
     dur = max((r.done_s for r in recs), default=0.0)
-    res = LoadgenResult("Server", len(recs), dur, lat,
-                        qps=len(recs) / dur if dur else 0.0,
+    res = LoadgenResult("Server", len(done), dur, lat,
+                        qps=len(done) / dur if dur else 0.0,
                         min_duration_met=dur >= min_duration_s)
-    total_tokens = sum(len(r.output or []) for r in recs)
+    total_tokens = sum(len(r.output or []) for r in done)
     return ServerMetrics(res, res.p99 <= latency_slo_s, ttft, tpot,
                          total_tokens,
-                         total_tokens / dur if dur else 0.0)
+                         total_tokens / dur if dur else 0.0,
+                         n_admitted=len(admitted), n_shed=n_shed,
+                         n_timeout=n_timeout)
 
 
 def loops_for_min_duration(workload_s: float,

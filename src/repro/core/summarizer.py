@@ -46,6 +46,10 @@ class EnergySummary:
     # multi-domain runs: which channels *are* the submission total
     # (wall/pdu/pin); per_node_j keeps every channel's breakdown
     boundary_nodes: tuple = ()
+    # delivered/expected in-window samples per channel (channels whose
+    # samples carry a sample_hz; telemetry dropout shows up here and is
+    # thresholded by compliance invariant R12)
+    channel_coverage: dict = dataclasses.field(default_factory=dict)
 
     @property
     def per_domain_j(self) -> dict:
@@ -65,12 +69,14 @@ def summarize(perf_events: list[LogEvent], power_events: list[LogEvent],
 
     by_node: dict[str, list[tuple[float, float]]] = defaultdict(list)
     node_boundary: dict[str, bool] = {}
+    node_hz: dict[str, Optional[float]] = {}
     for ev in power_events:
         if ev.key != "power_w":
             continue
         md = ev.metadata or {}
         node = md.get("node", "sut")
         by_node[node].append((ev.time_ms, float(ev.value)))
+        node_hz.setdefault(node, md.get("sample_hz"))
         # a channel marked boundary=False is a per-component breakdown
         # inside another channel's boundary: report it per-node, but
         # never sum it into the total (that would double-count the
@@ -80,12 +86,17 @@ def summarize(perf_events: list[LogEvent], power_events: list[LogEvent],
 
     per_node_j = {}
     n_samples = 0
+    coverage = {}
     for node, samples in by_node.items():
         samples.sort()
         t = np.asarray([s[0] for s in samples])
         w = np.asarray([s[1] for s in samples])
         sel = (t >= start_ms) & (t <= stop_ms)
         n_samples += int(sel.sum())
+        hz = node_hz.get(node)
+        if hz:
+            coverage[node] = float(
+                min(1.0, sel.sum() / max(window_s * float(hz), 1.0)))
         if sel.sum() < 2:
             per_node_j[node] = 0.0
             continue
@@ -95,6 +106,12 @@ def summarize(perf_events: list[LogEvent], power_events: list[LogEvent],
     energy = float(sum(per_node_j[n] for n in boundary_nodes))
 
     notes = []
+    degraded = {n: c for n, c in coverage.items() if c < 0.99}
+    if degraded:
+        worst = min(degraded, key=degraded.get)
+        notes.append(f"degraded sample coverage: "
+                     f"{len(degraded)} channel(s), worst {worst} at "
+                     f"{degraded[worst]:.1%}")
     switch_j = 0.0
     if switch_estimate is not None:
         switch_j = float(switch_estimate["watts"]) * window_s
@@ -113,7 +130,8 @@ def summarize(perf_events: list[LogEvent], power_events: list[LogEvent],
         avg_watts=energy / max(window_s, 1e-12),
         per_node_j=dict(per_node_j), n_samples=n_samples,
         samples_processed=processed, switch_energy_j=switch_j,
-        notes=tuple(notes), boundary_nodes=boundary_nodes)
+        notes=tuple(notes), boundary_nodes=boundary_nodes,
+        channel_coverage=coverage)
     if processed:
         summary.samples_per_second = processed / window_s
         summary.samples_per_joule = processed / energy

@@ -42,6 +42,7 @@ from repro.harness.scenarios import (  # noqa: F401
 from repro.harness.power_run import (  # noqa: F401
     PowerRun, SubmissionResult, analyzer_for_scale,
 )
+from repro.core.loadgen import ShedPolicy  # noqa: F401
 from repro.power import (  # noqa: F401
     MeterStack, PowerDomain, PSUModel, build_stack,
 )

@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.core import efficiency
 from repro.core.analyzer import AnalyzerSpec, VirtualAnalyzer
-from repro.core.compliance import ReviewReport, review
+from repro.core.compliance import Check, ReviewReport, review
 from repro.core.director import Director
 from repro.core.loadgen import Clock, QuerySampleLibrary
 from repro.core.mlperf_log import MLPerfLogger
@@ -72,6 +72,11 @@ class SubmissionResult:
     # per-domain views (populated by every MeterStack run)
     meter_stack: Optional[MeterStack] = None
     per_request_domain_energy_j: Optional[dict] = None
+    # robustness views: one dict per executed attempt (the retry loop's
+    # audit trail — rejection reasons of every invalid attempt), and
+    # the stack's per-channel degradation health
+    attempts: Optional[list] = None
+    channel_health: Optional[dict] = None
 
     @property
     def passed(self) -> bool:
@@ -136,6 +141,21 @@ class PowerRun:
     to reuse a session across runs; ``sample_hz`` overrides every
     stack channel's sampling rate together (benchmarks resolving
     sub-second windows pass 1000.0).
+
+    Robustness knobs:
+
+    - ``fault_plan`` (``repro.faults.FaultPlan``): the run's injected
+      hazards.  Metering faults are applied inside the stack; the plan
+      is also handed to the scenario and SUT when they accept one
+      (queue-overload bursts, replica crash/hang).
+    - ``meter_retry`` (``repro.faults.RetryPolicy``): bounds the
+      stack's re-range / re-measure degradation loop.
+    - ``retry_policy`` (``repro.faults.RetryPolicy``): an invalid
+      (REJECTED) run is re-executed up to ``max_attempts`` times;
+      every attempt's rejection reasons land in ``result.attempts``.
+    - ``watchdog_s``: wall-clock budget per attempt; an overrun
+      appends a failed ``W1 watchdog`` check (a hung run must fail
+      loudly, not hang the harness report).
     """
 
     def __init__(self, sut, scenario: Scenario, *,
@@ -149,7 +169,12 @@ class PowerRun:
                  workload: Optional[str] = None,
                  version: str = "v1.0",
                  system_id: Optional[str] = None,
-                 software_id: str = "repro-jax"):
+                 software_id: str = "repro-jax",
+                 fault_plan=None,
+                 meter_retry=None,
+                 retry_policy=None,
+                 watchdog_s: Optional[float] = None,
+                 coverage_threshold: float = 0.95):
         self.sut = sut
         self.scenario = scenario
         self.qsl = qsl or QuerySampleLibrary(64, lambda i: {"idx": i})
@@ -164,6 +189,19 @@ class PowerRun:
         self.version = version
         self.system_id = system_id
         self.software_id = software_id
+        self.fault_plan = fault_plan
+        self.meter_retry = meter_retry
+        self.retry_policy = retry_policy
+        self.watchdog_s = watchdog_s
+        self.coverage_threshold = coverage_threshold
+        if fault_plan is not None:
+            # one plan drives every layer: hand it to the scenario
+            # (queue bursts) and the SUT (replica crash/hang) when
+            # they take one and don't already have their own
+            if getattr(scenario, "fault_plan", False) is None:
+                scenario.fault_plan = fault_plan
+            if getattr(sut, "fault_plan", False) is None:
+                sut.fault_plan = fault_plan
 
     def _meter_stack(self, outcome, scale: str) -> MeterStack:
         make = getattr(self.sut, "meter_stack", None)
@@ -183,6 +221,45 @@ class PowerRun:
                                    analyzer)
 
     def run(self) -> SubmissionResult:
+        """Execute the run; with ``retry_policy``, re-execute invalid
+        attempts (bounded) and return the first valid one — or the last
+        attempt with the full per-attempt rejection trail."""
+        import time as _time
+
+        plan = self.fault_plan
+        policy = self.retry_policy
+        n_attempts = policy.max_attempts if policy is not None else 1
+        attempts: list[dict] = []
+        result = None
+        for attempt in range(n_attempts):
+            if plan is not None:
+                # transient faults fire only on attempt 0 (plan.active)
+                plan.attempt = attempt
+            t0 = _time.perf_counter()
+            result = self._run_once()
+            wall_s = _time.perf_counter() - t0
+            if (self.watchdog_s is not None
+                    and wall_s > self.watchdog_s):
+                result.report.checks.append(Check(
+                    "W1 watchdog", False,
+                    f"attempt took {wall_s:.2f} s wall > "
+                    f"{self.watchdog_s:.2f} s budget — runaway run "
+                    f"killed by the harness watchdog"))
+            attempts.append({
+                "attempt": attempt,
+                "valid": result.report.passed,
+                "wall_s": wall_s,
+                "rejected": [f"{c.rule}: {c.detail}"
+                             for c in result.report.failures()],
+            })
+            if result.report.passed:
+                break
+        if plan is not None:
+            plan.attempt = 0     # same plan re-runs byte-identically
+        result.attempts = attempts
+        return result
+
+    def _run_once(self) -> SubmissionResult:
         outcome = self.scenario.run(self.sut, self.qsl, self.clock)
         sysdesc = self.sut.system_description()
         stack = self._meter_stack(outcome, sysdesc.scale)
@@ -198,16 +275,23 @@ class PowerRun:
             log.run_stop(dur_s * 1e3)
             return dur_s
 
+        injector = None
+        if self.fault_plan is not None:
+            from repro.faults import FaultInjector
+
+            injector = FaultInjector(self.fault_plan)
         perf_log, power_log = director.run_measurement(
             sut_run=sut_run, meter_stack=stack,
             range_mode=self.range_mode,
-            probe_duration_s=self.probe_duration_s)
+            probe_duration_s=self.probe_duration_s,
+            fault_injector=injector, meter_retry=self.meter_retry)
         summary = summarize(perf_log.events, power_log.events,
                             switch_estimate=self.switch_estimate)
         report = review(perf_log.events, power_log.events, sysdesc,
                         min_duration_s=self.scenario.min_duration_s,
                         range_mode_used=self.range_mode,
-                        meter_stack=stack)
+                        meter_stack=stack,
+                        coverage_threshold=self.coverage_threshold)
         submission = efficiency.Submission(
             version=self.version,
             workload=self.workload or self.sut.name,
@@ -244,7 +328,9 @@ class PowerRun:
         return SubmissionResult(outcome, summary, report, submission,
                                 perf_log, power_log, per_request,
                                 meter_stack=stack,
-                                per_request_domain_energy_j=per_request_domain)
+                                per_request_domain_energy_j=per_request_domain,
+                                channel_health=dict(stack.health)
+                                if getattr(stack, "health", None) else None)
 
 
 def _power_samples(power_log: MLPerfLogger, *,

@@ -115,6 +115,12 @@ class Server(Scenario):
     to the SUT's admission queue (``run_server_queue``) and reports
     TTFT/TPOT; ``mode="auto"`` prefers the queue when the SUT's
     ``supports_serve_queue()`` hook says one exists.
+
+    The robustness knobs (queue mode only) pass straight through to
+    ``run_server_queue``: ``deadline_s`` per-request deadlines,
+    ``shed`` (a ``repro.core.loadgen.ShedPolicy``) admission-control
+    load shedding, and ``fault_plan`` (``repro.faults.FaultPlan``)
+    queue-overload burst splicing.
     """
 
     target_qps: float = 4.0
@@ -122,6 +128,9 @@ class Server(Scenario):
     mode: str = "auto"               # auto | sync | queue
     min_queries: int = 32
     seed: int = 0
+    deadline_s: Optional[float] = None
+    shed: Optional[object] = None    # loadgen.ShedPolicy
+    fault_plan: Optional[object] = None   # faults.FaultPlan
     name = "Server"
 
     def _use_queue(self, sut) -> bool:
@@ -142,7 +151,10 @@ class Server(Scenario):
                                  latency_slo_s=self.latency_slo_s,
                                  min_duration_s=self.min_duration_s,
                                  seed=self.seed,
-                                 min_queries=self.min_queries)
+                                 min_queries=self.min_queries,
+                                 deadline_s=self.deadline_s,
+                                 shed=self.shed,
+                                 fault_plan=self.fault_plan)
             return ScenarioOutcome("Server", m.result,
                                    m.result.n_queries,
                                    slo_met=m.slo_met, server=m)

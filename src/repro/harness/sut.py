@@ -499,10 +499,28 @@ class ReplicatedSUT(BaseSUT):
     the paper's PDU-aggregation fallback.  ``replica_energy_j`` splits
     the fleet energy back per replica, and the attribution test checks
     the parts sum to the whole.
+
+    Fault handling (``fault_plan`` — a ``repro.faults.FaultPlan``):
+
+    - ``ReplicaCrash(i, at_s)``: replica *i* dies at ``at_s`` on the
+      shared serve clock.  Queries it completed before the crash
+      stand; everything else from its share is re-dispatched
+      round-robin onto the survivors after ``retry``'s backoff (one
+      re-dispatch wave; no duplicate or lost qids either way — the
+      queue runner's conservation check holds).  The dead replica's
+      power channels clamp to zero from ``at_s``, so fleet energy
+      bills it exactly through the crash.
+    - ``ReplicaHang(i, at_s, duration_s)``: replica *i* stalls; its
+      in-flight completions shift by the stall (late enough ones may
+      blow the per-request deadline — counted, not hidden).
+
+    Without ``retry``, a crash that loses queries raises instead of
+    silently shrinking the result set.
     """
 
     def __init__(self, replicas: list, *, name: str = "replicated",
-                 sysdesc: Optional[SystemDescription] = None):
+                 sysdesc: Optional[SystemDescription] = None,
+                 fault_plan=None, retry=None):
         if not replicas:
             raise ValueError("ReplicatedSUT needs at least one replica")
         base = replicas[0].system_description()
@@ -516,6 +534,8 @@ class ReplicatedSUT(BaseSUT):
                 idle_system_watts=base.idle_system_watts * r)
         super().__init__(name, sysdesc)
         self.replicas = replicas
+        self.fault_plan = fault_plan
+        self.retry = retry
         self.completed: list = []
         # speculative fleets: delegate draft-aware energy weighting to
         # the replicas' (identical) weight functions so per-request
@@ -528,12 +548,20 @@ class ReplicatedSUT(BaseSUT):
     def n_replicas(self) -> int:
         return len(self.replicas)
 
+    def _crash_time(self, i: int) -> Optional[float]:
+        if self.fault_plan is None:
+            return None
+        c = self.fault_plan.crash_of(i)
+        return float(c.at_s) if c is not None else None
+
     def serve_queue(self, arrivals: list[tuple[dict, float]]) -> list:
         from concurrent.futures import ThreadPoolExecutor
 
-        shares = [arrivals[i::self.n_replicas]
+        from repro.core.loadgen import qid_of
+
+        plan = self.fault_plan
+        shares = [list(arrivals[i::self.n_replicas])
                   for i in range(self.n_replicas)]
-        self.completed = []
         # replicas are independent engines on independent t=0 clocks;
         # serve them concurrently so fleet wall time is one schedule,
         # not R of them (each replica sleeps through its own arrivals).
@@ -543,8 +571,65 @@ class ReplicatedSUT(BaseSUT):
         with ThreadPoolExecutor(self.n_replicas) as pool:
             futures = [pool.submit(rep.serve_queue, share)
                        for rep, share in zip(self.replicas, shares)]
-            for f in futures:
-                self.completed.extend(f.result())
+            waves = [list(f.result()) for f in futures]
+
+        # absorb the plan's replica faults: shift hung completions,
+        # drop a crashed replica's post-crash completions and collect
+        # the lost share for re-dispatch
+        lost: list[tuple[dict, float]] = []
+        crash_at = 0.0
+        for i, recs in enumerate(waves):
+            hang = plan.hang_of(i) if plan is not None else None
+            if hang is not None:
+                for r in recs:
+                    if r.done_s is not None and r.done_s >= hang.at_s:
+                        r.done_s += hang.duration_s
+                        if (r.first_token_s is not None
+                                and r.first_token_s >= hang.at_s):
+                            r.first_token_s += hang.duration_s
+            tc = self._crash_time(i)
+            if tc is not None:
+                kept = [r for r in recs
+                        if r.done_s is not None and r.done_s < tc]
+                done = {r.rid for r in kept}
+                for j, (s, a) in enumerate(shares[i]):
+                    if qid_of(s, j) not in done:
+                        lost.append((s, float(a)))
+                crash_at = max(crash_at, tc)
+                waves[i] = kept
+
+        if lost:
+            survivors = [i for i in range(self.n_replicas)
+                         if self._crash_time(i) is None]
+            if not survivors:
+                raise RuntimeError(
+                    f"{self.name}: every replica crashed — "
+                    f"{len(lost)} queries unservable")
+            if self.retry is None:
+                raise RuntimeError(
+                    f"{self.name}: replica crash lost {len(lost)} "
+                    f"queries; pass retry=RetryPolicy() to re-dispatch "
+                    f"them onto the surviving replicas")
+            # one re-dispatch wave: the lost share re-arrives on the
+            # survivors after the crash is detected + backoff
+            delay = self.retry.delay_s(0)
+            redo = sorted(lost, key=lambda sa: (sa[1],
+                                                qid_of(sa[0], 0)))
+            redo = [(s, max(a, crash_at) + delay) for s, a in redo]
+            shares2 = {i: redo[k::len(survivors)]
+                       for k, i in enumerate(survivors)}
+            with ThreadPoolExecutor(len(survivors)) as pool:
+                futures = {i: pool.submit(self.replicas[i].serve_queue,
+                                          share)
+                           for i, share in shares2.items()}
+                for i, f in futures.items():
+                    waves[i] = waves[i] + list(f.result())
+
+        # per-replica completed reflects every wave this replica served
+        # (utilization spans + energy billing see retried queries too)
+        for rep, recs in zip(self.replicas, waves):
+            rep.completed = recs
+        self.completed = [r for recs in waves for r in recs]
         rids = [r.rid for r in self.completed]
         if len(set(rids)) != len(rids):
             raise ValueError(
@@ -572,6 +657,21 @@ class ReplicatedSUT(BaseSUT):
                                      qps=outcome.result.qps * frac)
         return dataclasses.replace(outcome, result=result)
 
+    def _crash_clamped(self, i: int, src):
+        """A replica's trace, zeroed from its crash time: the dead
+        replica draws nothing after ``at_s``, so fleet energy bills it
+        exactly through the crash (and the PDU register — sum of
+        *measured* feeds — agrees by construction)."""
+        tc = self._crash_time(i)
+        if tc is None or src is None:
+            return src
+
+        def clamped(t, _src=src, _tc=tc):
+            t = np.asarray(t, float)
+            return np.where(t < _tc, np.asarray(_src(t), float), 0.0)
+
+        return clamped
+
     def domains(self, outcome) -> list[PowerDomain]:
         doms: list[PowerDomain] = []
         wall_names: list[str] = []
@@ -583,7 +683,8 @@ class ReplicatedSUT(BaseSUT):
             g = f"r{i}"
             for d in rdoms:
                 doms.append(PowerDomain(
-                    name=f"{g}/{d.name}", source=d.source, kind=d.kind,
+                    name=f"{g}/{d.name}",
+                    source=self._crash_clamped(i, d.source), kind=d.kind,
                     group=g, boundary=False,
                     derived_from=tuple(f"{g}/{n}"
                                        for n in d.derived_from),
@@ -607,9 +708,30 @@ class ReplicatedSUT(BaseSUT):
             return psus[0]
         return None
 
+    def _replica_source(self, rep, rout) -> PowerSource:
+        """One replica's boundary trace: the sum of its wall feeds when
+        it is domain-native (the exact series its share of the PDU
+        register meters), else its legacy scalar source."""
+        doms = rep.domains(rout) if hasattr(rep, "domains") else None
+        if doms is not None:
+            walls = [d.source for d in doms
+                     if d.kind == WALL and d.source is not None]
+            if walls:
+                def src(t, _walls=tuple(walls)):
+                    t = np.asarray(t, float)
+                    total = np.zeros_like(t)
+                    for w in _walls:
+                        total = total + np.asarray(w(t), float)
+                    return total
+
+                return src
+        return rep.power_source(rout)
+
     def replica_sources(self, outcome) -> list[PowerSource]:
-        return [rep.power_source(self._replica_outcome(rep, outcome))
-                for rep in self.replicas]
+        return [self._crash_clamped(
+                    i, self._replica_source(
+                        rep, self._replica_outcome(rep, outcome)))
+                for i, rep in enumerate(self.replicas)]
 
     def power_source(self, outcome) -> PowerSource:
         sources = self.replica_sources(outcome)

@@ -106,6 +106,9 @@ class MeterStack:
         self.meters = list(meters)
         self.psu = psu
         self.name = name
+        # per-channel degradation record of the last measure() with an
+        # injector: {channel: repro.faults.ChannelHealth}
+        self.health: dict = {}
 
     # --- introspection -------------------------------------------------
     def __iter__(self):
@@ -158,7 +161,8 @@ class MeterStack:
 
     # --- measurement ----------------------------------------------------
     def measure(self, duration_s: float, *, t0_ms: float = 0.0,
-                logger: Optional[MLPerfLogger] = None) -> dict:
+                logger: Optional[MLPerfLogger] = None,
+                injector=None, retry=None) -> dict:
         """Sample every channel over the same window; returns
         ``{channel: (t_ms, watts)}``.
 
@@ -168,9 +172,21 @@ class MeterStack:
         boundary is exactly the sum of what its feeds reported.  All
         channels share one timeline (uniform sample rate enforced),
         the precondition for cross-domain energy comparison.
+
+        ``injector`` (a ``repro.faults.FaultInjector``) applies the
+        fault plan's metering hazards to each measured channel, and the
+        stack degrades gracefully instead of logging lies: clipped
+        intervals are re-ranged and re-measured, sample gaps re-measured
+        (bounded exponential backoff per ``retry``, a
+        ``repro.faults.RetryPolicy``), skewed timestamps realigned to
+        the stack's own nominal grid.  What happened lands in
+        ``self.health`` (per-channel ``ChannelHealth``); residual gaps
+        and clipped samples reach the log marked for the compliance
+        invariants (R12 coverage / R13 no-clipping) to catch.
         """
         out: dict = {}
         grid = None
+        hz = None
         for m in self.meters:
             if m.analyzer is None:
                 continue
@@ -178,12 +194,30 @@ class MeterStack:
                                          t0_ms=t0_ms)
             if grid is None:
                 grid = t_ms
+                hz = m.analyzer.spec.sample_hz
             elif len(t_ms) != len(grid):
                 raise ValueError(
                     f"channel {m.name!r} samples at "
                     f"{m.analyzer.spec.sample_hz} Hz — all channels of "
                     f"a stack share one timeline (uniform sample rate)")
             out[m.name] = (t_ms, w)
+        # fault injection + graceful degradation runs BEFORE derived
+        # resolution: a derived register sums what its feeds *measured*
+        # (surge/clip effects and retried intervals included), so the
+        # PDU invariant stays exact under faults the stack absorbed
+        self.health = {}
+        flags: dict = {}
+        if injector is not None:
+            for m in self.meters:
+                if m.analyzer is None:
+                    continue
+                t_ms, w = out[m.name]
+                w, dropped, clipped, health = self._degrade(
+                    m, t_ms, w, t0_ms=t0_ms, hz=hz, injector=injector,
+                    retry=retry)
+                out[m.name] = (t_ms, w)
+                flags[m.name] = (dropped, clipped)
+                self.health[m.name] = health
         # resolve derived channels (PDU-style aggregation; an order
         # that only references already-resolved channels is required)
         pending = [m for m in self.meters if m.analyzer is None]
@@ -206,18 +240,115 @@ class MeterStack:
         if logger is not None:
             for m in self.meters:
                 t_ms, w = out[m.name]
-                meta = m.domain.metadata()
-                for ti, wi in zip(t_ms, w):
+                # sample_hz rides along so coverage (R12) can compare
+                # delivered samples against the channel's own cadence
+                meta = dict(m.domain.metadata())
+                meta["sample_hz"] = (m.analyzer.spec.sample_hz
+                                     if m.analyzer is not None else hz)
+                dropped, clipped = flags.get(m.name, (None, None))
+                for i, (ti, wi) in enumerate(zip(t_ms, w)):
+                    if dropped is not None and dropped[i]:
+                        continue   # lost in telemetry: never logged
+                    extra = meta
+                    if clipped is not None and clipped[i]:
+                        extra = dict(meta, clipped=True)
                     logger.power_sample(float(ti), float(wi),
                                         node=m.name,
                                         source=m.instrument,
-                                        extra=meta)
-        return out
+                                        extra=extra)
+        # the telemetry view: residual dropped samples are gaps
+        view: dict = {}
+        for name, (t_ms, w) in out.items():
+            dropped = flags.get(name, (None,))[0]
+            if dropped is not None and dropped.any():
+                keep = ~dropped
+                view[name] = (t_ms[keep], w[keep])
+            else:
+                view[name] = (t_ms, w)
+        return view
+
+    def coverage(self) -> dict:
+        """Per-channel delivered/expected sample fraction of the last
+        injected measure(); clean channels report 1.0."""
+        return {name: h.coverage for name, h in self.health.items()}
+
+    def _bump_range(self, m: Meter) -> bool:
+        """Re-range after clipping: step the channel to the next range
+        (PTDaemon's cure for an overload — one step per retry, since a
+        clipped reading hides the true peak)."""
+        a = m.analyzer
+        if a is None or a.fixed_range is None:
+            return False                # autorange never clips here
+        above = [r for r in a.spec.ranges_w if r > a.fixed_range]
+        if not above:
+            return False                # already at the top range
+        a.fixed_range = above[0]
+        return True
+
+    def _degrade(self, m: Meter, t_ms: np.ndarray, w: np.ndarray, *,
+                 t0_ms: float, hz: float, injector, retry):
+        """Inject one channel's faults, then re-range/re-measure the
+        affected intervals with bounded exponential backoff."""
+        from repro.faults.inject import ChannelHealth
+
+        rel_s = (np.asarray(t_ms, float) - t0_ms) / 1e3
+        w, dropped, clipped, shift_ms = injector.apply(m, rel_s, w,
+                                                       retry=0)
+        health = ChannelHealth()
+        if np.any(shift_ms != 0.0):
+            # the stack owns the nominal grid (one shared timeline), so
+            # a skew spike is detected as deviation from it and cured
+            # by realigning to the grid; the correction is surfaced in
+            # health rather than silently swallowed
+            health.skew_corrected_ms = float(np.max(np.abs(shift_ms)))
+        k = 0
+        max_attempts = retry.max_attempts if retry is not None else 0
+        while (dropped.any() or clipped.any()) and k < max_attempts:
+            if clipped.any():
+                if self._bump_range(m):
+                    health.reranges += 1
+                elif not dropped.any():
+                    break               # top range: no structural fix
+            health.retries += 1
+            health.backoff_s += retry.delay_s(k)
+            bad = dropped | clipped
+            for i0, i1 in _spans(bad):
+                nn = i1 - i0 + 1
+                start_s = float(rel_s[i0])
+                # the analyzer samples from t=0, so the interval source
+                # is the channel waveform shifted to the span start
+                seg_src = (lambda t, _src=m.domain.source, _a=start_s:
+                           _src(np.asarray(t, float) + _a))
+                _, seg_w = m.analyzer.measure(
+                    seg_src, (nn + 0.5) / hz,
+                    t0_ms=t0_ms + start_s * 1e3)
+                seg_w, seg_drop, seg_clip, _ = injector.apply(
+                    m, rel_s[i0:i1 + 1], seg_w[:nn], retry=k + 1)
+                w[i0:i1 + 1] = seg_w
+                dropped[i0:i1 + 1] = seg_drop
+                clipped[i0:i1 + 1] = seg_clip
+            k += 1
+        health.n_dropped = int(dropped.sum())
+        health.n_clipped = int(clipped.sum())
+        health.coverage = 1.0 - health.n_dropped / max(1, len(w))
+        return w, dropped, clipped, health
 
     def shift_clock(self, logger: MLPerfLogger, offset_ms: float):
         """Move logged samples into the SUT clock (post-NTP-sync)."""
         for ev in logger.events:
             ev.time_ms += offset_ms
+
+
+def _spans(mask: np.ndarray) -> list[tuple[int, int]]:
+    """Contiguous True runs of a boolean mask as inclusive (i0, i1)
+    index pairs (the intervals the degradation loop re-measures)."""
+    idx = np.flatnonzero(mask)
+    if not len(idx):
+        return []
+    breaks = np.flatnonzero(np.diff(idx) > 1)
+    starts = np.concatenate([[0], breaks + 1])
+    stops = np.concatenate([breaks, [len(idx) - 1]])
+    return [(int(idx[a]), int(idx[b])) for a, b in zip(starts, stops)]
 
 
 def single_source_stack(source, analyzer: Optional[VirtualAnalyzer]

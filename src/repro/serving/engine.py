@@ -465,6 +465,13 @@ class ContinuousBatchingEngine:
         that start at t=0).  With ``honor_arrivals=False`` the queue is
         drained as fast as slots free up (Offline scenario).
         """
+        counts = collections.Counter(r.rid for r in requests)
+        dup = sorted(r for r, c in counts.items() if c > 1)
+        if dup:                        # validate before touching state
+            raise ValueError(
+                f"duplicate request ids in admission queue: {dup} — "
+                f"rids must be unique per serve() (derive them from "
+                f"the loadgen qid, repro.core.loadgen.qid_of)")
         self.reset()
         self.spec_stats = self._zero_spec_stats()
         self.host_syncs = 0            # per-serve, like spec_stats

@@ -1,0 +1,254 @@
+"""Negative compliance tests: one per invariant R1-R13.
+
+Each test hand-builds a minimal *valid* submission log, tampers with
+exactly the aspect one invariant guards, and proves ``review()``
+REJECTS the run with that invariant named — i.e. a faulted or forged
+run can never slip through as a plausible-but-wrong number.
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.core.compliance import SystemDescription, review
+from repro.core.mlperf_log import LogEvent, MLPerfLogger
+from repro.power import PSUModel
+
+HZ = 10.0
+DUR_S = 65.0
+RAILS = {"accelerator": 20.0, "host": 10.0}  # DC load: 30 W
+
+
+class _StackStub:
+    """Just enough MeterStack surface for review(): a documented PSU
+    model (enables R10) with no channel registry (KeyError falls back
+    to the default analyzer gain slack)."""
+
+    def __init__(self, psu):
+        self.psu = psu
+
+    def channel(self, name):
+        raise KeyError(name)
+
+
+def _perf_events(duration_s=DUR_S):
+    log = MLPerfLogger("perf")
+    log.run_start(0.0)
+    log.result("samples_processed", 240, duration_s * 1e3)
+    log.run_stop(duration_s * 1e3)
+    return log.events
+
+
+def _power_events(duration_s=DUR_S, psu=None):
+    psu = psu or PSUModel(rated_watts=100.0, efficiency=0.9)
+    log = MLPerfLogger("power")
+    t_ms = np.arange(0.0, duration_s + 1e-9, 1.0 / HZ) * 1e3
+    for name, watts in RAILS.items():
+        for ti in t_ms:
+            log.power_sample(ti, watts, node=name,
+                             extra={"kind": name, "group": "",
+                                    "boundary": False, "sample_hz": HZ})
+    wall_w = float(psu.wall_watts(sum(RAILS.values())))
+    for ti in t_ms:
+        log.power_sample(ti, wall_w, node="wall",
+                         extra={"kind": "wall", "group": "",
+                                "boundary": True, "sample_hz": HZ})
+    return log.events, psu
+
+
+def _sysdesc(**kw):
+    base = dict(scale="edge", max_system_watts=100,
+                idle_system_watts=8)
+    base.update(kw)
+    return SystemDescription(**base)
+
+
+def _review(perf=None, power=None, sysdesc=None, psu=None, **kw):
+    if power is None:
+        power, psu = _power_events()
+    return review(perf if perf is not None else _perf_events(),
+                  power, sysdesc or _sysdesc(),
+                  meter_stack=_StackStub(psu) if psu else None, **kw)
+
+
+def _assert_rejected(report, rule):
+    failed = [c.rule for c in report.failures()]
+    assert not report.passed, f"expected a {rule} rejection"
+    assert any(r.startswith(rule) for r in failed), \
+        f"{rule} not named in failures {failed}"
+    assert "=> REJECTED" in report.render()
+
+
+def _drop(events, node, lo_s, hi_s):
+    return [ev for ev in events
+            if not (ev.key == "power_w"
+                    and (ev.metadata or {}).get("node") == node
+                    and lo_s * 1e3 <= ev.time_ms <= hi_s * 1e3)]
+
+
+def _scale_node(events, node, factor):
+    out = []
+    for ev in events:
+        if ev.key == "power_w" and \
+                (ev.metadata or {}).get("node") == node:
+            ev = LogEvent(ev.key, ev.value * factor, ev.time_ms,
+                          ev.namespace, ev.metadata)
+        out.append(ev)
+    return out
+
+
+def test_untampered_baseline_accepted():
+    rep = _review()
+    assert rep.passed, rep.render()
+    assert "=> ACCEPTED" in rep.render()
+
+
+def test_r1_short_window_rejected():
+    power, psu = _power_events(duration_s=30.0)
+    _assert_rejected(
+        _review(perf=_perf_events(duration_s=30.0), power=power,
+                psu=psu), "R1")
+
+
+def test_r2_undersampled_rejected():
+    power, psu = _power_events()
+    # keep every 20th sample per channel: 0.5 Hz/node vs required 1 Hz
+    kept, i = [], {}
+    for ev in power:
+        if ev.key != "power_w":
+            kept.append(ev)
+            continue
+        node = (ev.metadata or {}).get("node")
+        if i.setdefault(node, 0) % 20 == 0:
+            kept.append(ev)
+        i[node] += 1
+    _assert_rejected(_review(power=kept, psu=psu), "R2")
+
+
+def test_r3_telemetry_gap_rejected():
+    power, psu = _power_events()
+    # a 10 s hole in one node's samples: > 1.5x the allowed 2 s gap
+    _assert_rejected(
+        _review(power=_drop(power, "accelerator", 20.0, 30.0), psu=psu),
+        "R3")
+
+
+def test_r4_unapproved_instrument_rejected_edge():
+    _assert_rejected(
+        _review(sysdesc=_sysdesc(instrument_spec_approved=False)), "R4")
+
+
+def test_r4_undocumented_telemetry_rejected_datacenter():
+    _assert_rejected(
+        _review(sysdesc=_sysdesc(scale="datacenter",
+                                 telemetry_accuracy=None)), "R4")
+
+
+def test_r5_partial_scope_rejected():
+    _assert_rejected(_review(sysdesc=_sysdesc(scope=("chips",))), "R5")
+
+
+def test_r6_undocumented_estimation_rejected():
+    _assert_rejected(
+        _review(sysdesc=_sysdesc(
+            estimated_components={"interconnect": ""})), "R6")
+
+
+def test_r7_average_outside_envelope_rejected():
+    # declared envelope tops out at 20 W; the wall averages ~33 W
+    _assert_rejected(_review(sysdesc=_sysdesc(max_system_watts=20)),
+                     "R7")
+
+
+def test_r8_autorange_on_sub75w_edge_rejected():
+    _assert_rejected(_review(range_mode_used=False), "R8")
+
+
+def test_r9_wall_below_rails_rejected():
+    power, psu = _power_events()
+    # halved wall readings claim less energy than the DC rails drew
+    _assert_rejected(_review(power=_scale_node(power, "wall", 0.5),
+                             psu=psu), "R9")
+
+
+def test_r10_psu_inconsistency_rejected():
+    power, psu = _power_events()
+    # +20% wall still exceeds the rails (R9 passes) but contradicts
+    # the documented PSU efficiency model
+    rep = _review(power=_scale_node(power, "wall", 1.2), psu=psu)
+    _assert_rejected(rep, "R10")
+    assert all(c.passed for c in rep.checks
+               if c.rule.startswith("R9"))
+
+
+def test_r10_timeline_mismatch_rejected():
+    power, psu = _power_events()
+    # uncured dropout leaves the wall on a different sample grid than
+    # the rails; R10 refuses to compare mismatched timelines
+    rep = _review(power=_drop(power, "wall", 20.0, 21.0), psu=psu,
+                  coverage_threshold=0.90)
+    _assert_rejected(rep, "R10")
+    assert any("timeline" in c.detail for c in rep.failures())
+
+
+def test_r11_pdu_sum_mismatch_rejected():
+    # fleet-style log: two replica walls + the derived PDU register
+    log = MLPerfLogger("power")
+    t_ms = np.arange(0.0, DUR_S + 1e-9, 1.0 / HZ) * 1e3
+    for node, watts in (("r0/wall", 16.0), ("r1/wall", 14.0)):
+        for ti in t_ms:
+            log.power_sample(ti, watts, node=node,
+                             extra={"kind": "wall", "group": node[:2],
+                                    "boundary": False, "sample_hz": HZ})
+    for ti in t_ms:
+        log.power_sample(ti, 30.0 * 1.01, node="pdu",  # tampered +1%
+                         extra={"kind": "pdu", "group": "",
+                                "boundary": True, "sample_hz": HZ,
+                                "source": "derived:r0/wall+r1/wall"})
+    _assert_rejected(_review(power=log.events), "R11")
+
+
+def test_r12_boundary_dropout_rejected():
+    power, psu = _power_events()
+    # 10% of the wall samples never delivered: coverage 90% < 95%
+    _assert_rejected(
+        _review(power=_drop(power, "wall", 20.0, 26.5), psu=psu),
+        "R12")
+
+
+def test_r12_breakdown_rail_dropout_tolerated():
+    power, psu = _power_events()
+    # same-sized hole in a non-boundary rail is NOT a validity hazard
+    # (R3's gap check still guards the overall telemetry stream, so
+    # keep the hole under its 3 s limit)
+    power = _drop(power, "host", 20.0, 22.5)
+    power = _drop(power, "host", 30.0, 32.5)
+    power = _drop(power, "host", 40.0, 41.5)
+    rep = _review(power=power, psu=psu)
+    r12 = [c for c in rep.checks if c.rule.startswith("R12")]
+    assert r12 and all(c.passed for c in r12)
+
+
+def test_r13_clipped_boundary_samples_rejected():
+    power, psu = _power_events()
+    tampered = []
+    for ev in power:
+        md = ev.metadata or {}
+        if ev.key == "power_w" and md.get("node") == "wall" \
+                and 20e3 <= ev.time_ms <= 25e3:
+            ev = LogEvent(ev.key, ev.value, ev.time_ms, ev.namespace,
+                          dict(md, clipped=True))
+        tampered.append(ev)
+    rep = _review(power=tampered, psu=psu)
+    _assert_rejected(rep, "R13")
+    assert any("re-ranging" in c.detail for c in rep.failures())
+
+
+def test_sysdesc_is_frozen_against_post_hoc_edits():
+    # the review inputs themselves resist tampering: SystemDescription
+    # is immutable, so a failed R4/R5 can't be patched after the fact
+    sd = _sysdesc()
+    if dataclasses.is_dataclass(sd) and \
+            getattr(type(sd), "__dataclass_params__").frozen:
+        import pytest
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            sd.scale = "tiny"

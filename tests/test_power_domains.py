@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 
 from repro.core.compliance import SystemDescription, review
-from repro.core.loadgen import Clock
+from repro.core.loadgen import Clock, qid_of
 from repro.core.power_model import StepWork, SystemPowerModel
 from repro.harness import (BaseSUT, CallableSUT, PowerRun, ReplicatedSUT,
                            Server, SingleStream, rail_domains,
@@ -369,10 +369,10 @@ class TestReplicatedPDU:
         def make_replica(i):
             def serve(arrivals):
                 return [types.SimpleNamespace(
-                    rid=1000 * i + j, arrival_s=a,
+                    rid=qid_of(s, j), arrival_s=a,
                     first_token_s=a + 0.01, done_s=a + 0.05,
                     output=[1, 2], energy_j=None)
-                    for j, (_, a) in enumerate(arrivals)]
+                    for j, (s, a) in enumerate(arrivals)]
 
             psu = PSUModel(rated_watts=60.0, efficiency=0.9)
             rails = [PowerDomain("accelerator", _const(8.0 + i)),
