@@ -17,6 +17,10 @@ stage() {
     echo "===== [tier1] stage: ${name} OK ($(( $(date +%s) - t0 ))s) ====="
 }
 
+# 0. static analysis: kernel contracts, jit purity, unit consistency —
+#    rejects the bug classes runtime tests on virtual devices can't see
+stage repro-lint python -m repro.analysis --fail-on-new
+
 # 1. full test suite (pytest reads PYTEST_ADDOPTS from the environment,
 #    so CI can add --junitxml/--durations without changing this script)
 stage tests python -m pytest -q

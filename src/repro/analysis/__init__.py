@@ -1,0 +1,43 @@
+"""Static-analysis suite: prove kernels, jit purity, and energy units
+correct *before* anything runs.
+
+The runtime compliance review (invariants R1-R13) rejects a submission
+whose measured joules are untrustworthy; this package rejects the bug
+classes no runtime check on virtual devices can see — an
+under-covering Pallas grid, a hidden host sync in a jitted decode
+path, a ``energy_j += watts`` unit slip — by name, with a rule id,
+``file:line``, and a fix hint, over the real tree:
+
+- ``repro.analysis.kernels``  (KRN rules): validates each kernel
+  package's declarative ``KernelContract`` — grid x index_map output
+  coverage (no gaps, no double-writes), block/operand divisibility,
+  dtype consistency, VMEM/SMEM footprint budgets.
+- ``repro.analysis.purity``   (PUR rules): AST pass over ``src/`` for
+  host syncs inside jit/``_impl`` bodies, Python branches on traced
+  values, shared mutable dataclass defaults, PRNG key reuse, untraced
+  side effects in ``fori_loop``/``while_loop`` bodies.
+- ``repro.analysis.units``    (UNT rules): dimensional analysis driven
+  by the repo's suffix convention (``_w``/``_watts``, ``_j``, ``_s``,
+  ``_ms``, ``_hz``, ``x_per_y``) propagated through assignments,
+  arithmetic, and calls.
+
+CLI::
+
+    python -m repro.analysis                       # report
+    python -m repro.analysis --fail-on-new         # CI gate
+    python -m repro.analysis --update-baseline     # ratchet refresh
+
+Inline suppression: ``# repro: noqa[KRN002]`` (or a bare
+``# repro: noqa`` for every rule) on the flagged line.  Pre-existing
+findings live in ``benchmarks/baselines/lint.json`` with a mandatory
+justification string; the gate fails on new findings AND on baselined
+findings that vanish without a baseline refresh (the ratchet stays
+honest in both directions).
+"""
+from repro.analysis.contracts import (  # noqa: F401
+    KernelContract, KernelInstance, OperandSpec, ScratchSpec,
+)
+from repro.analysis.findings import (  # noqa: F401
+    Finding, load_baseline, save_baseline,
+)
+from repro.analysis.runner import run_all  # noqa: F401

@@ -1,0 +1,528 @@
+"""Pass 2 — jit-purity linter (PUR rules): an AST pass over ``src/``.
+
+What runtime testing on virtual devices cannot catch, this pass
+rejects by name:
+
+- PUR001  host syncs inside traced bodies — ``.item()``, ``numpy``
+          calls, ``jax.device_get``, ``float()/int()`` applied to a
+          traced argument, wall-clock reads.  Each one silently
+          serializes the decode loop (and bills host time to the
+          accelerator's energy window).
+- PUR002  Python ``if`` on a traced argument — a tracer in boolean
+          context either raises at trace time or, worse, burns the
+          branch into the compiled program for every input.
+- PUR003  a shared mutable instance as a dataclass field default
+          (the exact ``AnalyzerSpec()`` bug PR 5 fixed by hand):
+          ``field(default_factory=...)`` or a frozen type is required.
+- PUR004  a PRNG key passed to two ``jax.random`` draws without a
+          ``split``/``fold_in`` between them — correlated randomness.
+- PUR005  untraced side effects (``print``, ``.append`` on a closure,
+          ``nonlocal``/``global`` writes, numpy calls) inside a
+          ``fori_loop``/``while_loop``/``scan`` body — they run once
+          at trace time, not per iteration.
+
+"Traced" functions are those decorated with ``jax.jit`` /
+``partial(jax.jit, ...)`` / ``shard_map``, functions whose name ends
+in ``_impl`` (the repo's convention for jit-wrapped engine bodies),
+and every function nested inside one.  ``static_argnames`` declared in
+the decorator are exempt from PUR001/PUR002.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.findings import Finding, relpath
+
+# numpy attribute calls that are pure shape/dtype queries, not syncs
+_NP_STATIC_OK = {"dtype", "float32", "int32", "bfloat16", "float64",
+                 "int8", "bool_", "newaxis", "pi", "inf", "nan"}
+# attribute accesses on a tracer that are static metadata, not values
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding",
+                 "aval", "weak_type"}
+_TIME_FUNCS = {"time", "monotonic", "perf_counter", "process_time"}
+# calls that consume a key WITHOUT invalidating it for reuse checks
+_KEY_SAFE = {"split", "fold_in", "PRNGKey", "key", "key_data",
+             "wrap_key_data", "clone"}
+# immutable builtins allowed as dataclass defaults when called
+_IMMUTABLE_CALLS = {"tuple", "frozenset", "field", "MISSING"}
+
+
+def _numpy_aliases(tree: ast.AST) -> set[str]:
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name in ("numpy", "numpy.ma"):
+                    names.add(a.asname or a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "numpy":
+                for a in node.names:
+                    names.add(a.asname or a.name)
+    return names
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.random.uniform' for an Attribute/Name chain, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _decorator_info(fn: ast.AST) -> tuple[bool, set[str]]:
+    """(is_traced_by_decorator, static_argnames)."""
+    static: set[str] = set()
+    traced = False
+    for dec in getattr(fn, "decorator_list", []):
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = _dotted(target)
+        inner = ""
+        if (isinstance(dec, ast.Call) and name.endswith("partial")
+                and dec.args):
+            inner = _dotted(dec.args[0])
+        for cand in (name, inner):
+            if cand.split(".")[-1] in ("jit", "shard_map", "pjit"):
+                traced = True
+        if isinstance(dec, ast.Call):
+            for kw in dec.keywords:
+                if kw.arg == "static_argnames":
+                    for el in ast.walk(kw.value):
+                        if (isinstance(el, ast.Constant)
+                                and isinstance(el.value, str)):
+                            static.add(el.value)
+    return traced, static
+
+
+def _walk_own(fn):
+    """Walk a function's own statements, skipping nested function and
+    class scopes (the scope walker visits those with their own
+    context — walking them twice would duplicate findings)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda, ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _param_names(fn) -> list[str]:
+    a = fn.args
+    names = [p.arg for p in
+             a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return [n for n in names if n not in ("self", "cls")]
+
+
+class _FileChecker:
+    def __init__(self, path: str, src: str, root: str,
+                 frozen_classes: set[str]):
+        self.path = relpath(path, root)
+        self.src = src
+        self.tree = ast.parse(src)
+        self.np_names = _numpy_aliases(self.tree)
+        self.frozen = frozen_classes
+        self.findings: list[Finding] = []
+
+    def emit(self, rule: str, node: ast.AST, message: str, hint: str,
+             obj: str, severity: str = "error"):
+        self.findings.append(Finding(
+            rule, severity, self.path, getattr(node, "lineno", 1),
+            message, hint, obj=obj))
+
+    # --- driver -------------------------------------------------------
+    def run(self) -> list[Finding]:
+        self._walk_scope(self.tree, traced=False, qual="")
+        return self.findings
+
+    def _walk_scope(self, node: ast.AST, traced: bool, qual: str,
+                    static: frozenset = frozenset()):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef,
+                                  ast.AsyncFunctionDef)):
+                dec_traced, dec_static = _decorator_info(child)
+                child_traced = (traced or dec_traced
+                                or child.name.endswith("_impl"))
+                child_qual = f"{qual}.{child.name}" if qual \
+                    else child.name
+                if child_traced:
+                    self._check_traced_fn(
+                        child, child_qual,
+                        frozenset(dec_static) | static)
+                self._check_key_reuse(child, child_qual)
+                self._check_loop_bodies(child, child_qual)
+                self._walk_scope(child, child_traced, child_qual,
+                                 frozenset(dec_static) | static)
+            elif isinstance(child, ast.ClassDef):
+                child_qual = f"{qual}.{child.name}" if qual \
+                    else child.name
+                self._check_dataclass(child, child_qual)
+                self._walk_scope(child, traced, child_qual, static)
+            else:
+                self._walk_scope(child, traced, qual, static)
+
+    # --- PUR001 / PUR002 ---------------------------------------------
+    def _check_traced_fn(self, fn, qual: str, static: frozenset):
+        params = frozenset(_param_names(fn)) - static
+        # only this function's own statements; nested defs are visited
+        # by the scope walk (they inherit tracedness)
+        for node in _walk_own(fn):
+            if isinstance(node, ast.Call):
+                self._check_host_sync(node, params, qual)
+            elif isinstance(node, (ast.If, ast.IfExp)):
+                self._check_traced_branch(node, params, qual)
+            elif isinstance(node, (ast.While,)):
+                self._check_traced_branch(node, params, qual)
+
+    def _check_host_sync(self, call: ast.Call, params: frozenset,
+                         qual: str):
+        name = _dotted(call.func)
+        head = name.split(".")[0] if name else ""
+        # X.item() — the canonical device->host sync
+        if (isinstance(call.func, ast.Attribute)
+                and call.func.attr == "item" and not call.args):
+            self.emit("PUR001", call,
+                      f"'.item()' inside traced function {qual!r} "
+                      f"forces a device->host sync",
+                      "keep the value on device (jnp.where/argmax) or "
+                      "sync once per chunk outside the jitted body",
+                      qual)
+            return
+        # numpy calls inside a traced body
+        if head in self.np_names and isinstance(call.func,
+                                                ast.Attribute):
+            if call.func.attr not in _NP_STATIC_OK:
+                self.emit("PUR001", call,
+                          f"numpy call '{name}(...)' inside traced "
+                          f"function {qual!r} materializes tracers on "
+                          f"host", "use jax.numpy; numpy forces a "
+                          "device->host transfer per trace", qual)
+            return
+        if name in ("jax.device_get",):
+            self.emit("PUR001", call,
+                      f"'{name}(...)' inside traced function {qual!r}",
+                      "fetch results after the jitted call returns",
+                      qual)
+            return
+        if (head == "time" and isinstance(call.func, ast.Attribute)
+                and call.func.attr in _TIME_FUNCS):
+            self.emit("PUR001", call,
+                      f"wall-clock read '{name}()' inside traced "
+                      f"function {qual!r} is evaluated once at trace "
+                      f"time", "time outside the jitted body", qual)
+            return
+        # float()/int()/bool() directly on a traced parameter
+        if (isinstance(call.func, ast.Name)
+                and call.func.id in ("float", "int", "bool")
+                and len(call.args) == 1
+                and isinstance(call.args[0], ast.Name)
+                and call.args[0].id in params):
+            self.emit("PUR001", call,
+                      f"'{call.func.id}({call.args[0].id})' on a "
+                      f"traced argument of {qual!r} forces a "
+                      f"device->host sync",
+                      "keep it as a 0-d array, or declare the "
+                      "argument in static_argnames", qual)
+
+    def _check_traced_branch(self, node, params: frozenset, qual: str):
+        test = node.test
+        hits = []
+        for sub in ast.walk(test):
+            if isinstance(sub, ast.Name) and sub.id in params:
+                hits.append(sub)
+        if not hits:
+            return
+        # references reached only through static metadata are fine:
+        # drop hits that appear under x.shape / x.ndim / len(x) /
+        # isinstance(x, ...)
+        shielded = set()
+        for sub in ast.walk(test):
+            if (isinstance(sub, ast.Attribute)
+                    and sub.attr in _STATIC_ATTRS):
+                for inner in ast.walk(sub.value):
+                    if isinstance(inner, ast.Name):
+                        shielded.add(id(inner))
+            if isinstance(sub, ast.Call):
+                fname = _dotted(sub.func)
+                if fname in ("len", "isinstance", "getattr",
+                             "hasattr", "type"):
+                    for inner in ast.walk(sub):
+                        if isinstance(inner, ast.Name):
+                            shielded.add(id(inner))
+        live = [h for h in hits if id(h) not in shielded]
+        if not live:
+            return
+        kind = ("while" if isinstance(node, ast.While) else "if")
+        self.emit("PUR002", node,
+                  f"Python '{kind}' on traced argument "
+                  f"{live[0].id!r} in {qual!r}",
+                  "use jnp.where/lax.cond/lax.select, or declare the "
+                  "argument in static_argnames if it is static", qual)
+
+    # --- PUR003 -------------------------------------------------------
+    def _check_dataclass(self, cls: ast.ClassDef, qual: str):
+        is_dc = False
+        for dec in cls.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if _dotted(target).split(".")[-1] == "dataclass":
+                is_dc = True
+        if not is_dc:
+            return
+        for stmt in cls.body:
+            if not (isinstance(stmt, ast.AnnAssign)
+                    and stmt.value is not None):
+                continue
+            v = stmt.value
+            field = (stmt.target.id
+                     if isinstance(stmt.target, ast.Name) else "?")
+            if isinstance(v, (ast.List, ast.Dict, ast.Set)):
+                self.emit("PUR003", stmt,
+                          f"dataclass {qual!r} field {field!r} has a "
+                          f"mutable literal default",
+                          "use field(default_factory=list/dict/set)",
+                          qual)
+                continue
+            if not isinstance(v, ast.Call):
+                continue
+            name = _dotted(v.func)
+            leaf = name.split(".")[-1]
+            if leaf in _IMMUTABLE_CALLS or leaf in self.frozen:
+                continue
+            if not leaf[:1].isupper() and leaf not in ("list", "dict",
+                                                       "set"):
+                continue            # lower-case calls: not constructors
+            self.emit(
+                "PUR003", stmt,
+                f"dataclass {qual!r} field {field!r} defaults to a "
+                f"shared '{name}()' instance — every instance "
+                f"constructed without an explicit value aliases ONE "
+                f"object, so a mutation (range pinning, spec edits) "
+                f"leaks across instances",
+                f"use field(default_factory={name}) (or freeze "
+                f"{leaf})", qual)
+
+    # --- PUR004 -------------------------------------------------------
+    # Flow-aware: draws in mutually-exclusive if/return branches are
+    # not reuse; a branch that terminates (return/raise) contributes
+    # nothing to the flow after the If.
+    def _check_key_reuse(self, fn, qual: str):
+        self._scan_key_block(fn.body, {}, qual)
+
+    def _scan_key_block(self, stmts, used: dict, qual: str
+                        ) -> tuple[dict, bool]:
+        """Returns ``(keys_drawn_after, flow_terminated)``."""
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if isinstance(stmt, (ast.Return, ast.Raise)):
+                self._scan_key_calls(stmt, used, qual)
+                return used, True
+            if isinstance(stmt, ast.If):
+                self._scan_key_calls(stmt.test, used, qual)
+                u1, t1 = self._scan_key_block(stmt.body, dict(used),
+                                              qual)
+                u2, t2 = self._scan_key_block(stmt.orelse, dict(used),
+                                              qual)
+                if t1 and t2:
+                    return used, True
+                used = u2 if t1 else u1 if t2 else {**u1, **u2}
+                continue
+            if isinstance(stmt, (ast.For, ast.While)):
+                self._scan_key_calls(
+                    stmt.iter if isinstance(stmt, ast.For)
+                    else stmt.test, used, qual)
+                used, _ = self._scan_key_block(stmt.body, used, qual)
+                used, _ = self._scan_key_block(stmt.orelse, used, qual)
+                continue
+            if isinstance(stmt, ast.With):
+                for item in stmt.items:
+                    self._scan_key_calls(item.context_expr, used, qual)
+                used, term = self._scan_key_block(stmt.body, used, qual)
+                if term:
+                    return used, True
+                continue
+            if isinstance(stmt, ast.Try):
+                used, _ = self._scan_key_block(stmt.body, used, qual)
+                for h in stmt.handlers:
+                    used, _ = self._scan_key_block(h.body, used, qual)
+                used, _ = self._scan_key_block(stmt.orelse, used, qual)
+                used, term = self._scan_key_block(stmt.finalbody, used,
+                                                  qual)
+                if term:
+                    return used, True
+                continue
+            # straight-line statement: draws happen, then a
+            # reassignment of the key clears its history
+            self._scan_key_calls(stmt, used, qual)
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            used.pop(n.id, None)
+            elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+                if isinstance(stmt.target, ast.Name):
+                    used.pop(stmt.target.id, None)
+        return used, False
+
+    def _scan_key_calls(self, node, used: dict, qual: str):
+        if node is None:
+            return
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda, ast.ClassDef)):
+                continue
+            if isinstance(n, ast.Call):
+                self._check_key_call(n, used, qual)
+            stack.extend(ast.iter_child_nodes(n))
+
+    def _check_key_call(self, node: ast.Call, used: dict, qual: str):
+        name = _dotted(node.func)
+        if not name.startswith("jax.random."):
+            return
+        fn_leaf = name.split(".")[-1]
+        if fn_leaf in _KEY_SAFE or not node.args:
+            return
+        arg = node.args[0]
+        if not isinstance(arg, ast.Name):
+            return
+        if arg.id in used:
+            self.emit(
+                "PUR004", node,
+                f"PRNG key {arg.id!r} reused by "
+                f"'jax.random.{fn_leaf}' in {qual!r} (first drawn "
+                f"at line {used[arg.id].lineno})",
+                "split the key (jax.random.split / fold_in); "
+                "reuse makes the two draws identical, not "
+                "independent", qual)
+        else:
+            used[arg.id] = node
+
+    # --- PUR005 -------------------------------------------------------
+    def _check_loop_bodies(self, fn, qual: str):
+        local_defs = {n.name: n for n in ast.walk(fn)
+                      if isinstance(n, ast.FunctionDef)}
+        for node in _walk_own(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _dotted(node.func)
+            leaf = name.split(".")[-1]
+            if leaf not in ("fori_loop", "while_loop", "scan"):
+                continue
+            if "lax" not in name and not name.startswith("jax"):
+                continue
+            body_idx = {"fori_loop": 2, "while_loop": 1, "scan": 0}[leaf]
+            if len(node.args) <= body_idx:
+                continue
+            body = node.args[body_idx]
+            if isinstance(body, ast.Name):
+                body = local_defs.get(body.id)
+            if body is None or not isinstance(body, (ast.Lambda,
+                                                     ast.FunctionDef)):
+                continue
+            self._check_loop_body(body, leaf, qual)
+
+    def _check_loop_body(self, body, loop: str, qual: str):
+        for node in ast.walk(body):
+            if isinstance(node, (ast.Nonlocal, ast.Global)):
+                self.emit("PUR005", node,
+                          f"'{type(node).__name__.lower()}' write "
+                          f"inside a {loop} body in {qual!r} runs at "
+                          f"trace time, not per iteration",
+                          "thread state through the loop carry", qual)
+            if not isinstance(node, ast.Call):
+                continue
+            name = _dotted(node.func)
+            if name == "print":
+                self.emit("PUR005", node,
+                          f"'print' inside a {loop} body in {qual!r} "
+                          f"executes once at trace time",
+                          "use jax.debug.print for per-iteration "
+                          "output", qual)
+            elif (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "append"):
+                self.emit("PUR005", node,
+                          f"'.append' inside a {loop} body in {qual!r} "
+                          f"mutates a host list at trace time — the "
+                          f"loop carry never sees it",
+                          "accumulate in the carry (lax.scan ys or a "
+                          "preallocated array)", qual)
+            elif (name.split(".")[0] in self.np_names
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr not in _NP_STATIC_OK):
+                self.emit("PUR005", node,
+                          f"numpy call '{name}' inside a {loop} body "
+                          f"in {qual!r} runs on host at trace time",
+                          "use jax.numpy inside traced loop bodies",
+                          qual)
+
+
+def _collect_frozen_classes(paths: list[str]) -> set[str]:
+    """Names of repo dataclasses declared frozen=True (their instances
+    are immutable, so they are legal shared defaults)."""
+    frozen: set[str] = set()
+    for path in paths:
+        try:
+            tree = ast.parse(open(path).read())
+        except SyntaxError:
+            continue
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            for dec in node.decorator_list:
+                if not isinstance(dec, ast.Call):
+                    continue
+                if _dotted(dec.func).split(".")[-1] != "dataclass":
+                    continue
+                for kw in dec.keywords:
+                    if (kw.arg == "frozen"
+                            and isinstance(kw.value, ast.Constant)
+                            and kw.value.value is True):
+                        frozen.add(node.name)
+    return frozen
+
+
+def iter_py_files(root: str, subdirs: tuple) -> list[str]:
+    out = []
+    for sub in subdirs:
+        base = os.path.join(root, sub)
+        if os.path.isfile(base) and base.endswith(".py"):
+            out.append(base)
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames
+                           if d != "__pycache__"]
+            for f in sorted(filenames):
+                if f.endswith(".py"):
+                    out.append(os.path.join(dirpath, f))
+    return sorted(out)
+
+
+def run(root: str, subdirs: tuple = ("src",),
+        extra_frozen: tuple = ()) -> list[Finding]:
+    paths = iter_py_files(root, subdirs)
+    frozen = _collect_frozen_classes(paths) | set(extra_frozen)
+    findings: list[Finding] = []
+    for path in paths:
+        src = open(path).read()
+        try:
+            checker = _FileChecker(path, src, root, frozen)
+        except SyntaxError as e:
+            findings.append(Finding(
+                "PUR001", "error", relpath(path, root),
+                e.lineno or 1, f"file does not parse: {e.msg}",
+                "fix the syntax error", obj=os.path.basename(path)))
+            continue
+        findings.extend(checker.run())
+    return findings

@@ -122,8 +122,8 @@ class Director:
             meter_stack = single_source_stack(power_source, self.analyzer)
         self.perf_log = MLPerfLogger("perf")
         self.power_log = MLPerfLogger("power")
-        offset = NTPSync().sync(self.rng)
-        self.clock_offset_ms = offset
+        offset_ms = NTPSync().sync(self.rng)
+        self.clock_offset_ms = offset_ms
         self.ptd = PTDSession(self.analyzer, meter_stack)
         self.ptd.connect()
         if range_mode:
@@ -131,13 +131,13 @@ class Director:
             # covering its own observed peak (not the stack peak)
             meter_stack.range_probe(probe_duration_s)
         self.ptd.start_logging()
-        duration = sut_run(self.perf_log)
+        duration_s = sut_run(self.perf_log)
         # all channels sample in Director clock on one shared timeline;
         # correct by the sync offset
-        meter_stack.measure(duration, t0_ms=-offset,
+        meter_stack.measure(duration_s, t0_ms=-offset_ms,
                             logger=self.power_log,
                             injector=fault_injector, retry=meter_retry)
         self.ptd.stop_logging()
         # shift power samples into SUT clock for the summarizer
-        meter_stack.shift_clock(self.power_log, offset)
+        meter_stack.shift_clock(self.power_log, offset_ms)
         return self.perf_log, self.power_log

@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 from collections import Counter
 from typing import Callable, Optional
 
@@ -107,13 +108,22 @@ class Clock:
     def now(self) -> float:
         return self.t
 
-    def advance(self, dt: float):
-        if dt < 0:
+    def advance(self, dt_s: Optional[float] = None, *,
+                dt: Optional[float] = None):
+        if dt is not None:               # deprecated unsuffixed alias
+            warnings.warn(
+                "Clock.advance(dt=...) is deprecated; the argument is "
+                "seconds — pass dt_s=", DeprecationWarning,
+                stacklevel=2)
+            dt_s = dt
+        if dt_s is None:
+            raise TypeError("Clock.advance() missing dt_s")
+        if dt_s < 0:
             raise ValueError(
-                f"Clock.advance({dt!r}): negative dt would run the "
+                f"Clock.advance({dt_s!r}): negative dt_s would run the "
                 f"virtual clock backwards (now={self.t!r}); measurement "
                 f"windows must be monotonic")
-        self.t += dt
+        self.t += dt_s
 
 
 def run_single_stream(issue: Callable[[dict], float], qsl: QuerySampleLibrary,
@@ -126,9 +136,9 @@ def run_single_stream(issue: Callable[[dict], float], qsl: QuerySampleLibrary,
     i = 0
     t0 = clock.now()
     while (clock.now() - t0 < min_duration_s) or (i < min_queries):
-        dt = issue(qsl.sample(i))
-        lat.append(dt)
-        clock.advance(dt)
+        dt_s = issue(qsl.sample(i))
+        lat.append(dt_s)
+        clock.advance(dt_s)
         i += 1
     dur = clock.now() - t0
     return LoadgenResult("SingleStream", i, dur, np.asarray(lat),
@@ -158,9 +168,9 @@ def run_multi_stream(issue_burst: Callable[[list[dict]], float],
     t0 = clock.now()
     while (clock.now() - t0 < min_duration_s) or (i < min_queries):
         burst = [qsl.sample(i * n_streams + j) for j in range(n_streams)]
-        dt = issue_burst(burst)
-        lat.append(dt)
-        clock.advance(dt)
+        dt_s = issue_burst(burst)
+        lat.append(dt_s)
+        clock.advance(dt_s)
         i += 1
     dur = clock.now() - t0
     return LoadgenResult("MultiStream", i, dur, np.asarray(lat),
@@ -178,9 +188,9 @@ def run_offline(issue_batch: Callable[[list[dict]], float],
     n = 0
     times = []
     while clock.now() - t0 < min_duration_s or n == 0:
-        dt = issue_batch([qsl.sample(n + j) for j in range(batch)])
-        clock.advance(dt)
-        times.append(dt)
+        dt_s = issue_batch([qsl.sample(n + j) for j in range(batch)])
+        clock.advance(dt_s)
+        times.append(dt_s)
         n += batch
     dur = clock.now() - t0
     per_sample = np.repeat(np.asarray(times) / batch, batch)

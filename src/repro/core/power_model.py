@@ -17,6 +17,7 @@ tiny scale uses the MAC-level MCU model with sleep between inferences.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -142,12 +143,18 @@ class SystemPowerModel:
     # ------------------------------------------------------------------
     def trace(self, work: StepWork, *, duration_s: float,
               init_s: float = 0.0, teardown_s: float = 0.0,
-              jitter: float = 0.02, dt: float = 0.1,
+              jitter: float = 0.02, dt_s: float = 0.1,
+              dt: Optional[float] = None,
               seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
         """Power trace (t, watts) with init/execute/teardown phases."""
+        if dt is not None:               # deprecated unsuffixed alias
+            warnings.warn(
+                "trace(dt=...) is deprecated; the step is seconds — "
+                "pass dt_s=", DeprecationWarning, stacklevel=2)
+            dt_s = dt
         rng = np.random.default_rng(seed)
-        total = init_s + duration_s + teardown_s
-        t = np.arange(0.0, total, dt)
+        total_s = init_s + duration_s + teardown_s
+        t = np.arange(0.0, total_s, dt_s)
         p_idle = self.system_watts(None)
         p_exec = self.system_watts(work)
         p = np.where((t >= init_s) & (t < init_s + duration_s),

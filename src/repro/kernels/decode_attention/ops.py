@@ -18,6 +18,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import (
+    KernelContract, KernelInstance, OperandSpec, ScratchSpec,
+)
 from repro.kernels.decode_attention.decode_attention import (
     decode_attention_kernel, verify_attention_kernel,
 )
@@ -91,3 +94,103 @@ def verify_attention(q, k_cache, v_cache, pos, *,
                                 interpret=interpret)
     return o.reshape(b, kvh, t, g, d).transpose(0, 2, 1, 3, 4).reshape(
         b, t, h, d)
+
+
+# --- static contracts (repro.analysis) -----------------------------------
+# Each build() reproduces the shape arithmetic above (fit_block_k +
+# pad-to-multiple), so the checker enumerates exactly the grid the
+# pallas_call would run — including the shard-local clamp path where
+# the whole cache fits in one lane-aligned block.
+
+def _decode_contract(case):
+    b, s = case["b"], case["s"]
+    h, kvh, d = case["h"], case["kvh"], case["d"]
+    g = h // kvh
+    block_k = fit_block_k(s, case.get("block_k"))
+    sp = s + (-s) % block_k                 # cache length after padding
+    bh = b * kvh
+    dt = case.get("dtype", "bfloat16")
+    return KernelInstance(
+        grid=(bh, sp // block_k),
+        semantics=("parallel", "arbitrary"),
+        inputs=(
+            OperandSpec("pos", (bh,), "int32", memory_space="smem"),
+            OperandSpec("q", (bh, g, d), dt, block=(1, g, d),
+                        index_map=lambda bb, ik: (bb, 0, 0)),
+            OperandSpec("k", (bh, sp, d), dt, block=(1, block_k, d),
+                        index_map=lambda bb, ik: (bb, ik, 0)),
+            OperandSpec("v", (bh, sp, d), dt, block=(1, block_k, d),
+                        index_map=lambda bb, ik: (bb, ik, 0)),
+        ),
+        outputs=(
+            OperandSpec("o", (bh, g, d), dt, block=(1, g, d),
+                        index_map=lambda bb, ik: (bb, 0, 0)),
+        ),
+        scratch=(
+            ScratchSpec((g, 1), "float32"),
+            ScratchSpec((g, 1), "float32"),
+            ScratchSpec((g, d), "float32"),
+        ),
+    )
+
+
+def _verify_contract(case):
+    b, t, s = case["b"], case["t"], case["s"]
+    h, kvh, d = case["h"], case["kvh"], case["d"]
+    g = h // kvh
+    block_k = fit_block_k(s, case.get("block_k"))
+    sp = s + (-s) % block_k
+    bh = b * kvh
+    dt = case.get("dtype", "bfloat16")
+    return KernelInstance(
+        grid=(bh, sp // block_k),
+        semantics=("parallel", "arbitrary"),
+        inputs=(
+            OperandSpec("pos", (bh,), "int32", memory_space="smem"),
+            OperandSpec("q", (bh, t, g, d), dt, block=(1, t, g, d),
+                        index_map=lambda bb, ik: (bb, 0, 0, 0)),
+            OperandSpec("k", (bh, sp, d), dt, block=(1, block_k, d),
+                        index_map=lambda bb, ik: (bb, ik, 0)),
+            OperandSpec("v", (bh, sp, d), dt, block=(1, block_k, d),
+                        index_map=lambda bb, ik: (bb, ik, 0)),
+        ),
+        outputs=(
+            OperandSpec("o", (bh, t, g, d), dt, block=(1, t, g, d),
+                        index_map=lambda bb, ik: (bb, 0, 0, 0)),
+        ),
+        scratch=(
+            ScratchSpec((t * g, 1), "float32"),
+            ScratchSpec((t * g, 1), "float32"),
+            ScratchSpec((t * g, d), "float32"),
+        ),
+    )
+
+
+CONTRACTS = (
+    KernelContract(
+        name="decode_attention",
+        build=_decode_contract,
+        cases=(
+            # serving shape: 8-way continuous batch, 4 KV heads, GQA 4
+            {"b": 8, "s": 4096, "h": 16, "kvh": 4, "d": 128},
+            # shard-local clamp path: cache shorter than max_block,
+            # fit_block_k rounds 160 -> one 256-wide padded block
+            {"b": 1, "s": 160, "h": 8, "kvh": 8, "d": 64},
+            # explicit block_k, MHA (kvh == h)
+            {"b": 2, "s": 1024, "h": 8, "kvh": 8, "d": 128,
+             "block_k": 256},
+        ),
+        dtype_groups=(("q", "k", "v", "o"),),
+    ),
+    KernelContract(
+        name="verify_attention",
+        build=_verify_contract,
+        cases=(
+            # speculative verify window of 4 draft tokens
+            {"b": 8, "t": 4, "s": 4096, "h": 16, "kvh": 4, "d": 128},
+            {"b": 2, "t": 8, "s": 512, "h": 8, "kvh": 2, "d": 64,
+             "block_k": 128},
+        ),
+        dtype_groups=(("q", "k", "v", "o"),),
+    ),
+)

@@ -6,6 +6,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import (
+    KernelContract, KernelInstance, OperandSpec, ScratchSpec,
+)
 from repro.kernels.flash_attention.flash_attention import (
     flash_attention_kernel,
 )
@@ -44,3 +47,61 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
     o = o[:, :, :sq]
     o = o.reshape(b, kvh, g, sq, d).reshape(b, h, sq, d)
     return o.transpose(0, 2, 1, 3)
+
+
+# --- static contract (repro.analysis) ------------------------------------
+
+def _flash_contract(case):
+    b, sq, skv = case["b"], case["sq"], case["skv"]
+    h, kvh, d = case["h"], case["kvh"], case["d"]
+    block_q = case.get("block_q", 128)
+    block_k = case.get("block_k", 128)
+    g = h // kvh
+    sqp = sq + (-sq) % block_q              # padded, as the wrapper pads
+    skvp = skv + (-skv) % block_k
+    bh = b * kvh
+    dt = case.get("dtype", "bfloat16")
+    return KernelInstance(
+        grid=(bh, g, sqp // block_q, skvp // block_k),
+        semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        inputs=(
+            OperandSpec("q", (bh, g, sqp, d), dt,
+                        block=(1, 1, block_q, d),
+                        index_map=lambda bb, gg, iq, ik:
+                        (bb, gg, iq, 0)),
+            OperandSpec("k", (bh, skvp, d), dt,
+                        block=(1, block_k, d),
+                        index_map=lambda bb, gg, iq, ik: (bb, ik, 0)),
+            OperandSpec("v", (bh, skvp, d), dt,
+                        block=(1, block_k, d),
+                        index_map=lambda bb, gg, iq, ik: (bb, ik, 0)),
+        ),
+        outputs=(
+            OperandSpec("o", (bh, g, sqp, d), dt,
+                        block=(1, 1, block_q, d),
+                        index_map=lambda bb, gg, iq, ik:
+                        (bb, gg, iq, 0)),
+        ),
+        scratch=(
+            ScratchSpec((block_q, 1), "float32"),
+            ScratchSpec((block_q, 1), "float32"),
+            ScratchSpec((block_q, d), "float32"),
+        ),
+    )
+
+
+CONTRACTS = (
+    KernelContract(
+        name="flash_attention",
+        build=_flash_contract,
+        cases=(
+            # prefill shape: GQA 4, both seq dims need padding
+            {"b": 2, "sq": 700, "skv": 700, "h": 16, "kvh": 4,
+             "d": 128},
+            # exact multiples, MHA, non-square blocks
+            {"b": 1, "sq": 512, "skv": 1024, "h": 8, "kvh": 8,
+             "d": 64, "block_q": 256, "block_k": 128},
+        ),
+        dtype_groups=(("q", "k", "v", "o"),),
+    ),
+)

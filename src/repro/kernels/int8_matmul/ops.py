@@ -6,6 +6,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import (
+    KernelContract, KernelInstance, OperandSpec, ScratchSpec,
+)
 from repro.kernels.int8_matmul.int8_matmul import int8_matmul_kernel
 
 
@@ -36,3 +39,51 @@ def int8_matmul(x, w, sx, sw, *, block_m: int = 256, block_n: int = 256,
                            block_k=block_k, out_dtype=out_dtype,
                            interpret=interpret)
     return o[:m, :n]
+
+
+# --- static contract (repro.analysis) ------------------------------------
+
+def _matmul_contract(case):
+    m, n, k = case["m"], case["n"], case["k"]
+    bm = case.get("block_m", 256)
+    bn = case.get("block_n", 256)
+    bk = case.get("block_k", 256)
+    mp = m + (-m) % bm                      # padded, as the wrapper pads
+    np_ = n + (-n) % bn
+    kp = k + (-k) % bk
+    out_dt = case.get("out_dtype", "bfloat16")
+    return KernelInstance(
+        grid=(mp // bm, np_ // bn, kp // bk),
+        semantics=("parallel", "parallel", "arbitrary"),
+        inputs=(
+            OperandSpec("x", (mp, kp), "int8", block=(bm, bk),
+                        index_map=lambda i, j, kk: (i, kk)),
+            OperandSpec("w", (kp, np_), "int8", block=(bk, bn),
+                        index_map=lambda i, j, kk: (kk, j)),
+            OperandSpec("sx", (mp, 1), "float32", block=(bm, 1),
+                        index_map=lambda i, j, kk: (i, 0)),
+            OperandSpec("sw", (1, np_), "float32", block=(1, bn),
+                        index_map=lambda i, j, kk: (0, j)),
+        ),
+        outputs=(
+            OperandSpec("o", (mp, np_), out_dt, block=(bm, bn),
+                        index_map=lambda i, j, kk: (i, j)),
+        ),
+        scratch=(ScratchSpec((bm, bn), "int32"),),
+    )
+
+
+CONTRACTS = (
+    KernelContract(
+        name="int8_matmul",
+        build=_matmul_contract,
+        cases=(
+            # MLP shape, every dim needs padding
+            {"m": 300, "n": 1100, "k": 700},
+            # exact multiples, asymmetric blocks, f32 output
+            {"m": 512, "n": 512, "k": 1024, "block_m": 128,
+             "block_n": 256, "block_k": 512, "out_dtype": "float32"},
+        ),
+        dtype_groups=(("x", "w"), ("sx", "sw")),
+    ),
+)

@@ -5,6 +5,9 @@ from functools import partial
 
 import jax
 
+from repro.analysis.contracts import (
+    KernelContract, KernelInstance, OperandSpec, ScratchSpec,
+)
 from repro.kernels.linear_scan.linear_scan import linear_scan_kernel
 
 
@@ -22,3 +25,52 @@ def linear_scan(r, k, v, logw, u, *, chunk: int = 64,
                               chunk=chunk, interpret=interpret)
     y = y.reshape(b, h, t, dh).transpose(0, 2, 1, 3)
     return y, s.reshape(b, h, dh, dh)
+
+
+# --- static contract (repro.analysis) ------------------------------------
+
+def _scan_contract(case):
+    b, t = case["b"], case["t"]
+    h, dh = case["h"], case["dh"]
+    chunk = case.get("chunk", 64)
+    bh = b * h
+    dt = case.get("dtype", "float32")
+
+    def seq(name):
+        return OperandSpec(name, (bh, t, dh), dt,
+                           block=(1, chunk, dh),
+                           index_map=lambda bb, c: (bb, c, 0))
+
+    return KernelInstance(
+        grid=(bh, t // chunk),
+        semantics=("parallel", "arbitrary"),
+        inputs=(
+            seq("r"), seq("k"), seq("v"), seq("logw"),
+            OperandSpec("u", (bh, 1, dh), dt, block=(1, 1, dh),
+                        index_map=lambda bb, c: (bb, 0, 0)),
+        ),
+        outputs=(
+            seq("y"),
+            # the running state is flushed once, on the last chunk;
+            # every revisit is along the 'arbitrary' time dim
+            OperandSpec("s_final", (bh, dh, dh), "float32",
+                        block=(1, dh, dh),
+                        index_map=lambda bb, c: (bb, 0, 0)),
+        ),
+        scratch=(ScratchSpec((dh, dh), "float32"),),
+    )
+
+
+CONTRACTS = (
+    KernelContract(
+        name="linear_scan",
+        build=_scan_contract,
+        cases=(
+            # RWKV-6 block shape
+            {"b": 4, "t": 1024, "h": 8, "dh": 64},
+            {"b": 1, "t": 256, "h": 2, "dh": 128, "chunk": 128,
+             "dtype": "bfloat16"},
+        ),
+        dtype_groups=(("r", "k", "v", "logw", "u", "y"),),
+    ),
+)

@@ -1,0 +1,531 @@
+"""Static-analysis suite tests: golden fixtures per rule family plus
+the meta-test that the live repo tree is clean.
+
+Each rule is proven on a minimal fixture that a human can eyeball —
+the KRN fixtures are in-code contracts (gap / double-write / bad
+block), the PUR/UNT fixtures are small Python files written to a tmp
+tree — and asserted down to rule id, file:line, and fix-hint substance.
+The baseline ratchet is tested in both directions: a new finding fails
+the gate, and a baselined finding that vanishes also fails the gate.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis import kernels as krn
+from repro.analysis import purity as pur
+from repro.analysis import units as unt
+from repro.analysis.contracts import (KernelContract, KernelInstance,
+                                      OperandSpec, ScratchSpec)
+from repro.analysis.findings import (Finding, file_suppressions, gate,
+                                     is_suppressed, load_baseline,
+                                     save_baseline, UNREVIEWED)
+from repro.analysis.runner import run_all
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+def _contract(build, **kw):
+    kw.setdefault("cases", ({},))
+    return KernelContract(name="fixture", build=build, **kw)
+
+
+def _write_tree(tmp_path, name, body):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(body))
+    return str(p)
+
+
+# --- Pass 1: kernel contracts (KRN) --------------------------------------
+
+class TestKernelRules:
+    def test_gap_krn001(self):
+        # grid of 2 over 4 output row-blocks: half never written
+        def build(case):
+            return KernelInstance(
+                grid=(2,), semantics=("parallel",), inputs=(),
+                outputs=(OperandSpec(
+                    "o", (4, 8), "float32", block=(1, 8),
+                    index_map=lambda i: (i, 0)),))
+        out = krn.check_contract(_contract(build), ROOT)
+        assert _rules(out) == ["KRN001"]
+        f = out[0]
+        assert "2 of 4 blocks never written" in f.message
+        assert "(2, 0)" in f.message            # the first gap, named
+        assert f.path.endswith("tests/test_analysis.py")
+        assert f.line > 0 and "tile the whole output" in f.hint
+
+    def test_parallel_double_write_krn002(self):
+        # both parallel dims map to the same output row: a race
+        def build(case):
+            return KernelInstance(
+                grid=(2, 2), semantics=("parallel", "parallel"),
+                inputs=(),
+                outputs=(OperandSpec(
+                    "o", (2, 8), "float32", block=(1, 8),
+                    index_map=lambda i, j: (i, 0)),))
+        out = krn.check_contract(_contract(build), ROOT)
+        assert _rules(out) == ["KRN002"]
+        assert "2 distinct parallel grid points" in out[0].message
+
+    def test_arbitrary_revisit_is_legal(self):
+        # same shape as the KRN002 case, but the second dim is the
+        # accumulation dim: no finding
+        def build(case):
+            return KernelInstance(
+                grid=(2, 2), semantics=("parallel", "arbitrary"),
+                inputs=(),
+                outputs=(OperandSpec(
+                    "o", (2, 8), "float32", block=(1, 8),
+                    index_map=lambda i, k: (i, 0)),))
+        assert krn.check_contract(_contract(build), ROOT) == []
+
+    def test_block_divisibility_krn003(self):
+        def build(case):
+            return KernelInstance(
+                grid=(1,), semantics=("parallel",),
+                inputs=(OperandSpec(
+                    "x", (100, 8), "float32", block=(48, 8),
+                    index_map=lambda i: (i, 0)),),
+                outputs=(OperandSpec(
+                    "o", (100, 8), "float32", block=(100, 8),
+                    index_map=lambda i: (0, 0)),))
+        out = krn.check_contract(_contract(build), ROOT)
+        assert _rules(out) == ["KRN003"]
+        assert "block 48 does not divide shape 100" in out[0].message
+        assert "fit_block_k" in out[0].hint
+
+    def test_dtype_group_krn004(self):
+        def build(case):
+            return KernelInstance(
+                grid=(1,), semantics=("parallel",),
+                inputs=(OperandSpec("x", (8, 8), "int8"),
+                        OperandSpec("w", (8, 8), "bfloat16")),
+                outputs=(OperandSpec(
+                    "o", (8, 8), "float32", block=(8, 8),
+                    index_map=lambda i: (0, 0)),))
+        out = krn.check_contract(
+            _contract(build, dtype_groups=(("x", "w"),)), ROOT)
+        assert _rules(out) == ["KRN004"]
+
+    def test_vmem_budget_krn005(self):
+        # one 32 MiB streamed block, double-buffered: over any budget
+        def build(case):
+            return KernelInstance(
+                grid=(1,), semantics=("parallel",),
+                inputs=(OperandSpec(
+                    "x", (4096, 2048), "float32", block=(4096, 2048),
+                    index_map=lambda i: (0, 0)),),
+                outputs=(OperandSpec(
+                    "o", (8, 128), "float32", block=(8, 128),
+                    index_map=lambda i: (0, 0)),),
+                scratch=(ScratchSpec((8, 128), "float32"),))
+        out = krn.check_contract(_contract(build), ROOT)
+        assert _rules(out) == ["KRN005"]
+        assert "VMEM footprint" in out[0].message
+
+    def test_build_failure_krn000(self):
+        def build(case):
+            raise RuntimeError("shape arithmetic broke")
+        out = krn.check_contract(_contract(build), ROOT)
+        assert _rules(out) == ["KRN000"]
+        assert "shape arithmetic broke" in out[0].message
+
+    def test_real_kernel_contracts_are_clean(self):
+        # all four kernel packages: contracts exist and prove out
+        assert krn.run(ROOT) == []
+
+    def test_decode_contract_matches_wrapper_arithmetic(self):
+        # the shard-local clamp case: fit_block_k(160) -> 256, one
+        # padded block — the contract must reproduce it, or the proof
+        # covers a grid the kernel never runs
+        from repro.kernels.decode_attention.ops import (CONTRACTS,
+                                                        fit_block_k)
+        decode = next(c for c in CONTRACTS
+                      if c.name == "decode_attention")
+        inst = decode.build({"b": 1, "s": 160, "h": 8, "kvh": 8,
+                             "d": 64})
+        assert fit_block_k(160) == 256
+        k = next(op for op in inst.inputs if op.name == "k")
+        assert k.shape[1] == 256 and k.block[1] == 256
+        assert inst.grid == (8, 1)
+
+
+# --- Pass 2: jit purity (PUR) --------------------------------------------
+
+class TestPurityRules:
+    def test_item_in_jit_pur001(self, tmp_path):
+        _write_tree(tmp_path, "f.py", """
+            import jax
+
+            @jax.jit
+            def step(x):
+                return x.item()
+        """)
+        out = pur.run(str(tmp_path), subdirs=("f.py",))
+        assert _rules(out) == ["PUR001"]
+        f = out[0]
+        assert f.line == 6 and ".item()" in f.message
+        assert "step" in f.message
+
+    def test_impl_suffix_is_traced(self, tmp_path):
+        _write_tree(tmp_path, "f.py", """
+            def decode_impl(x, n):
+                return float(x)
+        """)
+        out = pur.run(str(tmp_path), subdirs=("f.py",))
+        assert _rules(out) == ["PUR001"]
+        assert "'float(x)'" in out[0].message
+
+    def test_branch_on_traced_pur002(self, tmp_path):
+        _write_tree(tmp_path, "f.py", """
+            import jax
+
+            @jax.jit
+            def gate(x):
+                if x > 0:
+                    return x
+                return -x
+        """)
+        out = pur.run(str(tmp_path), subdirs=("f.py",))
+        assert _rules(out) == ["PUR002"]
+        assert "lax.cond" in out[0].hint
+
+    def test_static_argnames_exempt(self, tmp_path):
+        _write_tree(tmp_path, "f.py", """
+            import jax
+            from functools import partial
+
+            @partial(jax.jit, static_argnames=("n",))
+            def gate(x, n):
+                if n > 4:
+                    return x * 2
+                return x
+        """)
+        assert pur.run(str(tmp_path), subdirs=("f.py",)) == []
+
+    def test_shape_branch_is_static(self, tmp_path):
+        _write_tree(tmp_path, "f.py", """
+            import jax
+
+            @jax.jit
+            def pad(x):
+                if x.shape[0] % 8:
+                    return x
+                return x * 2
+        """)
+        assert pur.run(str(tmp_path), subdirs=("f.py",)) == []
+
+    def test_mutable_default_pur003(self, tmp_path):
+        _write_tree(tmp_path, "f.py", """
+            import dataclasses
+
+            @dataclasses.dataclass
+            class Spec:
+                rate: float = 1.0
+
+            @dataclasses.dataclass
+            class Meter:
+                spec: Spec = Spec()
+                tags: list = []
+        """)
+        out = pur.run(str(tmp_path), subdirs=("f.py",))
+        assert _rules(out) == ["PUR003", "PUR003"]
+        assert "shared 'Spec()' instance" in out[0].message
+        assert "default_factory" in out[0].hint
+
+    def test_frozen_default_is_legal(self, tmp_path):
+        _write_tree(tmp_path, "f.py", """
+            import dataclasses
+
+            @dataclasses.dataclass(frozen=True)
+            class Spec:
+                rate: float = 1.0
+
+            @dataclasses.dataclass
+            class Meter:
+                spec: Spec = Spec()
+        """)
+        assert pur.run(str(tmp_path), subdirs=("f.py",)) == []
+
+    def test_key_reuse_pur004(self, tmp_path):
+        _write_tree(tmp_path, "f.py", """
+            import jax
+
+            def init(key):
+                a = jax.random.normal(key, (4,))
+                b = jax.random.normal(key, (4,))
+                return a, b
+        """)
+        out = pur.run(str(tmp_path), subdirs=("f.py",))
+        assert _rules(out) == ["PUR004"]
+        assert "first drawn at line 5" in out[0].message
+
+    def test_key_split_and_exclusive_branches_ok(self, tmp_path):
+        # split between draws, and draws in mutually-exclusive
+        # if/return branches (the models/param.py shape), are not reuse
+        _write_tree(tmp_path, "f.py", """
+            import jax
+
+            def init(key):
+                a = jax.random.normal(key, (4,))
+                key = jax.random.split(key)[0]
+                b = jax.random.normal(key, (4,))
+                return a, b
+
+            def init_one(kind, key):
+                if kind == "embed":
+                    return jax.random.normal(key, (4,))
+                if kind == "small":
+                    return jax.random.normal(key, (4,))
+                return jax.random.normal(key, (8,))
+        """)
+        assert pur.run(str(tmp_path), subdirs=("f.py",)) == []
+
+    def test_loop_side_effect_pur005(self, tmp_path):
+        _write_tree(tmp_path, "f.py", """
+            import jax
+
+            def scanit(xs, out):
+                def body(i, c):
+                    print(i)
+                    out.append(c)
+                    return c + 1
+                return jax.lax.fori_loop(0, 4, body, 0)
+        """)
+        out = pur.run(str(tmp_path), subdirs=("f.py",))
+        assert _rules(out) == ["PUR005", "PUR005"]
+        assert any("jax.debug.print" in f.hint for f in out)
+        assert any("carry" in f.hint for f in out)
+
+
+# --- Pass 3: units (UNT) -------------------------------------------------
+
+class TestUnitRules:
+    def run(self, tmp_path, body):
+        _write_tree(tmp_path, "f.py", body)
+        return unt.run(str(tmp_path), subdirs=("f.py",))
+
+    def test_watts_plus_joules_unt001(self, tmp_path):
+        out = self.run(tmp_path, """
+            def total(watts, joules):
+                return watts + joules
+        """)
+        assert _rules(out) == ["UNT001"]
+        f = out[0]
+        assert "'watts + joules'" in f.message       # expression quoted
+        assert f.line == 3
+
+    def test_ms_vs_s_comparison_unt001(self, tmp_path):
+        out = self.run(tmp_path, """
+            def clipped(t_ms, start_s):
+                return t_ms >= start_s
+        """)
+        assert _rules(out) == ["UNT001"]
+        assert "ms" in out[0].message
+
+    def test_energy_from_mean_watts_unt002(self, tmp_path):
+        out = self.run(tmp_path, """
+            import numpy as np
+
+            def report(watts):
+                energy_j = np.mean(watts)
+                return energy_j
+        """)
+        assert _rules(out) == ["UNT002"]
+        assert "energy = integral of power" in out[0].hint
+
+    def test_kwarg_mismatch_unt003(self, tmp_path):
+        out = self.run(tmp_path, """
+            def go(t_ms, measure):
+                measure(duration_s=t_ms)
+        """)
+        assert _rules(out) == ["UNT003"]
+        assert "divide the milliseconds by 1e3" in out[0].hint
+
+    def test_return_mismatch_unt004(self, tmp_path):
+        out = self.run(tmp_path, """
+            def delay_s(backoff_ms):
+                return backoff_ms
+        """)
+        assert _rules(out) == ["UNT004"]
+
+    def test_correct_dimensional_algebra_is_clean(self, tmp_path):
+        # W*s=J, J/s=W, 1/hz=s, ms/1e3 rescales, literals are free
+        out = self.run(tmp_path, """
+            import numpy as np
+
+            SLO_S = 5.0
+            TARGET_QPS = 200.0
+
+            def summarize(watts, window_s, t_ms, sample_hz):
+                energy_j = float(np.trapezoid(watts, t_ms / 1e3))
+                avg_w = energy_j / max(window_s, 1e-12)
+                period_s = 1.0 / sample_hz
+                tok_per_j = 4096.0 / energy_j
+                deadline_ms = SLO_S * 1e3
+                return energy_j, avg_w, period_s, tok_per_j, deadline_ms
+        """)
+        assert out == []
+
+    def test_unit_propagates_through_locals(self, tmp_path):
+        out = self.run(tmp_path, """
+            import numpy as np
+
+            def report(watts):
+                avg = np.mean(watts)
+                energy_j = avg
+                return energy_j
+        """)
+        assert _rules(out) == ["UNT002"]
+
+    def test_per_name_parsing(self, tmp_path):
+        out = self.run(tmp_path, """
+            def eff(tok_per_j, energy_j):
+                watts = tok_per_j * energy_j
+                return watts
+        """)
+        # tokens/J * J = dimensionless, assigned to a watts name
+        assert _rules(out) == ["UNT002"]
+
+
+# --- suppression, baseline, runner, CLI ----------------------------------
+
+class TestFindingModel:
+    def test_fingerprint_is_line_insensitive(self):
+        a = Finding("UNT001", "error", "x.py", 10, "msg  here", obj="f")
+        b = Finding("UNT001", "error", "x.py", 99, "msg here", obj="f")
+        assert a.fingerprint == b.fingerprint
+        assert a.format().startswith("x.py:10: UNT001")
+
+    def test_noqa_parsing(self):
+        src = ("a = 1\n"
+               "b = watts + joules  # repro: noqa[UNT001]\n"
+               "c = 2  # repro: noqa\n"
+               "d = 3  # repro: noqa[KRN001, PUR002]\n")
+        supp = file_suppressions(src)
+        assert supp == {2: frozenset({"UNT001"}), 3: None,
+                        4: frozenset({"KRN001", "PUR002"})}
+        f2 = Finding("UNT001", "error", "x.py", 2, "m")
+        f2b = Finding("UNT002", "error", "x.py", 2, "m")
+        f3 = Finding("PUR004", "error", "x.py", 3, "m")
+        assert is_suppressed(f2, supp)
+        assert not is_suppressed(f2b, supp)      # wrong rule listed
+        assert is_suppressed(f3, supp)           # bare form: any rule
+
+    def test_inline_suppression_end_to_end(self, tmp_path):
+        _write_tree(tmp_path, "f.py", """
+            def total(watts, joules):
+                return watts + joules  # repro: noqa[UNT001]
+        """)
+        assert run_all(str(tmp_path), rules=("UNT",)) == []
+
+    def test_baseline_roundtrip_and_justification(self, tmp_path):
+        path = str(tmp_path / "lint.json")
+        f = Finding("UNT001", "error", "x.py", 3, "watts + joules")
+        save_baseline(path, [f])
+        base = load_baseline(path)
+        assert base[f.fingerprint]["justification"] == UNREVIEWED
+        base[f.fingerprint]["justification"] = "legacy scalar API"
+        with open(path, "w") as fh:
+            json.dump({"version": 1, "findings": base}, fh)
+        # refresh keeps the reviewed justification
+        save_baseline(path, [f], previous=load_baseline(path))
+        assert (load_baseline(path)[f.fingerprint]["justification"]
+                == "legacy scalar API")
+
+    def test_gate_both_directions(self):
+        old = Finding("UNT001", "error", "x.py", 3, "old finding")
+        new = Finding("UNT002", "error", "y.py", 7, "new finding")
+        baseline = {old.fingerprint: {"rule": "UNT001", "path": "x.py",
+                                      "justification": "known"}}
+        got_new, stale = gate([old, new], baseline)
+        assert [f.fingerprint for f in got_new] == [new.fingerprint]
+        assert stale == []
+        # the baselined finding vanished: the ratchet flags it
+        got_new, stale = gate([new], baseline)
+        assert stale == [old.fingerprint]
+
+
+class TestCLI:
+    def _cli(self, *args, cwd=ROOT):
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(ROOT, "src"))
+        return subprocess.run(
+            [sys.executable, "-m", "repro.analysis", *args],
+            capture_output=True, text=True, env=env, cwd=cwd)
+
+    def test_live_repo_is_clean_under_fail_on_new(self):
+        # the acceptance criterion: the PR tree passes its own gate
+        r = self._cli("--fail-on-new")
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "0 new" in r.stdout
+
+    def test_unknown_rule_prefix_is_usage_error(self):
+        r = self._cli("--rules", "XYZ")
+        assert r.returncode == 2
+        assert "unknown rule prefix" in r.stderr
+
+    def test_new_finding_fails_gate_with_hint(self, tmp_path):
+        core = tmp_path / "src" / "repro" / "core"
+        core.mkdir(parents=True)
+        _write_tree(core, "bad.py", """
+            def total(watts, joules):
+                return watts + joules
+        """)
+        r = self._cli("--root", str(tmp_path), "--rules", "UNT",
+                      "--baseline", str(tmp_path / "lint.json"),
+                      "--fail-on-new")
+        assert r.returncode == 1
+        assert "UNT001" in r.stdout
+        assert "--update-baseline" in r.stderr
+
+    def test_update_baseline_then_gate_passes_then_stale_fails(
+            self, tmp_path):
+        core = tmp_path / "src" / "repro" / "core"
+        core.mkdir(parents=True)
+        bad = _write_tree(core, "bad.py", """
+            def total(watts, joules):
+                return watts + joules
+        """)
+        baseline = str(tmp_path / "lint.json")
+        common = ("--root", str(tmp_path), "--rules", "UNT",
+                  "--baseline", baseline)
+        r = self._cli(*common, "--update-baseline")
+        assert r.returncode == 0 and "1 finding" in r.stdout
+        assert UNREVIEWED.split(" ")[0] in open(baseline).read()
+        r = self._cli(*common, "--fail-on-new")
+        assert r.returncode == 0, r.stdout + r.stderr
+        # fix the finding without refreshing the baseline: stale gate
+        os.unlink(bad)
+        r = self._cli(*common, "--fail-on-new")
+        assert r.returncode == 1
+        assert "no longer fire" in r.stderr
+        assert "stale:" in r.stderr
+
+    def test_out_writes_findings_json(self, tmp_path):
+        out = str(tmp_path / "findings.json")
+        r = self._cli("--rules", "UNT", "--out", out)
+        assert r.returncode == 0
+        data = json.load(open(out))
+        assert "findings" in data and "baseline" in data
+
+
+# --- the meta-test: the whole live tree, all three passes ----------------
+
+def test_live_tree_is_clean():
+    """Every pre-existing finding in this repo is fixed or baselined;
+    run_all over the real tree plus the committed baseline gate must
+    come back empty."""
+    findings = run_all(ROOT)
+    baseline = load_baseline(
+        os.path.join(ROOT, "benchmarks", "baselines", "lint.json"))
+    new, stale = gate(findings, baseline)
+    assert new == [], "\n".join(f.format() for f in new)
+    assert stale == [], stale
