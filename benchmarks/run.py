@@ -11,6 +11,7 @@ from __future__ import annotations
 import argparse
 import inspect
 import sys
+import time
 import traceback
 
 
@@ -22,11 +23,11 @@ def main(argv=None) -> None:
 
     from benchmarks import (accuracy_cost, efficiency_trends,
                             energy_per_inference, power_breakdown,
-                            power_range, quantization_efficiency,
-                            resilience, roofline_table, scale_sweep,
-                            scaling_energy, serving_throughput,
-                            speculative_efficiency, sw_hw_optimizations,
-                            tiny_edge_measured)
+                            power_range, prefix_cache,
+                            quantization_efficiency, resilience,
+                            roofline_table, scale_sweep, scaling_energy,
+                            serving_throughput, speculative_efficiency,
+                            sw_hw_optimizations, tiny_edge_measured)
 
     modules = [
         ("fig2_power_range", power_range),
@@ -43,11 +44,14 @@ def main(argv=None) -> None:
         ("speculative_efficiency", speculative_efficiency),
         ("power_breakdown", power_breakdown),
         ("resilience", resilience),
+        ("prefix_cache", prefix_cache),
     ]
     print("name,us_per_call,derived")
     n_rows = 0
     n_error = 0
+    timings = []
     for name, mod in modules:
+        t0 = time.perf_counter()
         try:
             kw = {}
             if args.smoke and \
@@ -59,6 +63,7 @@ def main(argv=None) -> None:
             # (CSV stays 3 columns); the traceback goes to stderr
             rows = [f"{name},0.0,ERROR:{type(e).__name__}"]
             traceback.print_exc(file=sys.stderr)
+        timings.append((name, time.perf_counter() - t0))
         for row in rows:
             print(row)
             n_rows += 1
@@ -66,7 +71,12 @@ def main(argv=None) -> None:
             # both forms must fail the gate, not just the exceptions
             if row.split(",", 2)[-1].startswith("ERROR"):
                 n_error += 1
-    print(f"# summary: {n_rows} rows, {n_error} ERROR")
+    # per-module wall time: how the sweep budget is actually spent
+    # (comment rows, so CSV parsers and the perf gate skip them)
+    for name, dt in timings:
+        print(f"# elapsed: {name} {dt:.1f}s")
+    total_s = sum(dt for _, dt in timings)
+    print(f"# summary: {n_rows} rows, {n_error} ERROR, {total_s:.1f}s")
     if n_error:
         raise SystemExit(1)
 

@@ -44,3 +44,9 @@ stage sharded-smoke env \
 #    (hardened runs valid, naive runs rejected or dead, never a
 #    plausible-but-wrong number)
 stage chaos-smoke python -m benchmarks.resilience --smoke
+
+# 6. paged serving smoke: paged KV + radix prefix cache must be
+#    token-identical to the contiguous engine (TP=1 in-order +
+#    shuffled pool, prefix hits, speculative rollback, TP=4 on the
+#    virtual mesh — the script forces its own 4-device host mesh)
+stage paged-serving python scripts/paged_smoke.py

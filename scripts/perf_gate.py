@@ -2,8 +2,11 @@
 """CI perf-regression gate: tok/s and tok/J must not regress.
 
 Collects the machine-measured serving numbers (``benchmarks/
-serving_throughput.metrics`` + ``benchmarks/scale_sweep.metrics``) and
-the modeled resilience numbers (``benchmarks/resilience.metrics`` —
+serving_throughput.metrics`` + ``benchmarks/scale_sweep.metrics`` +
+``benchmarks/prefix_cache.metrics`` — the paged-KV prefix-caching
+sweep, tok/J at hit rates 0 and 0.9 plus the host page-allocator
+rate) and the modeled resilience numbers
+(``benchmarks/resilience.metrics`` —
 goodput/J under injected faults, deterministic by seed) and compares
 them against the committed baseline
 (``benchmarks/baselines/smoke.json``).  A metric fails the gate when it
@@ -53,6 +56,9 @@ BASELINE = os.path.join(ROOT, "benchmarks", "baselines", "smoke.json")
 CALIBRATIONS = {
     "serving": "serving.fixed.tokens_per_s",
     "scale": "scale.tp1.tokens_per_s",
+    # hit-rate-0 point = the paged engine with the prefix cache never
+    # hitting: the group's all-miss execution profile
+    "prefix_cache": "prefix_cache.hit0.tokens_per_s",
 }
 # the virtual-mesh scale points (TP over forced host devices, threaded
 # replica fleets) carry inherently higher run-to-run noise than the
@@ -69,14 +75,16 @@ GROUP_TOL_FLOOR = {"scale": 0.30}
 # across machines and compared raw (the resilience group deliberately
 # has no calibration entry)
 GATED_SUFFIXES = ("tokens_per_s", "tok_per_j", "speedup",
-                  "meter_samples_per_s", "goodput_per_j")
+                  "meter_samples_per_s", "goodput_per_j",
+                  "page_alloc_ops_per_s")
 # pure-numpy metrics are NOT normalized by the (JAX-bound) calibration
 # workload — the numpy:JAX speed ratio varies across machines
 # independently, so cross-normalizing would fail healthy runners.
 # They get their own loose raw floor instead: the failure mode being
 # guarded (a de-vectorized analyzer loop) is a ~100x collapse, not a
 # 30% drift
-RAW_FLOOR_SUFFIXES = {"meter_samples_per_s": 0.7}
+RAW_FLOOR_SUFFIXES = {"meter_samples_per_s": 0.7,
+                      "page_alloc_ops_per_s": 0.7}
 REFRESH_CMD = ("PYTHONPATH=src python scripts/perf_gate.py --smoke "
                "--update-baseline")
 
@@ -95,12 +103,14 @@ def flatten(tree: dict, prefix: str = "") -> dict:
 
 def collect(smoke: bool = True) -> dict:
     """Run the gated benchmarks and return their nested metrics."""
-    from benchmarks import resilience, scale_sweep, serving_throughput
+    from benchmarks import (prefix_cache, resilience, scale_sweep,
+                            serving_throughput)
 
     return {
         "serving": serving_throughput.metrics(smoke=smoke),
         "scale": scale_sweep.metrics(smoke=smoke),
         "resilience": resilience.metrics(smoke=smoke),
+        "prefix_cache": prefix_cache.metrics(smoke=smoke),
     }
 
 

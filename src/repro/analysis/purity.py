@@ -258,6 +258,18 @@ class _FileChecker:
                     for inner in ast.walk(sub):
                         if isinstance(inner, ast.Name):
                             shielded.add(id(inner))
+            # ``x is None`` / ``x is not None``: a structural pytree-
+            # presence test (e.g. an optional page-table argument) —
+            # resolved per trace, never a tracer in boolean context
+            if (isinstance(sub, ast.Compare)
+                    and all(isinstance(op, (ast.Is, ast.IsNot))
+                            for op in sub.ops)
+                    and any(isinstance(c, ast.Constant)
+                            and c.value is None
+                            for c in [sub.left, *sub.comparators])):
+                for inner in ast.walk(sub):
+                    if isinstance(inner, ast.Name):
+                        shielded.add(id(inner))
         live = [h for h in hits if id(h) not in shielded]
         if not live:
             return

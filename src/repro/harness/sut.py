@@ -365,6 +365,15 @@ class ContinuousBatchingSUT(BaseSUT):
     by the draft/target parameter ratio — so both models' work is
     billed to the request that caused it and the per-request energies
     still sum to the fleet total.
+
+    Prefix caching (an engine with ``prefix_caching`` on): a
+    prefix-cache hit skipped the shared pages' prefill, so its energy
+    weight counts only the *unique-suffix* prefill it actually
+    computed (``prefill_tokens``) plus its decoded tokens — cached
+    prompt tokens are free, and the J they would have cost stays
+    billed to the requests that did the work.  (In speculative mode
+    ``verify_tokens`` already counts only computed prompt tokens, so
+    the draft weighting above composes with prefix hits unchanged.)
     """
 
     def __init__(self, engine, cfg, *, name: str = "continuous-engine",
@@ -388,6 +397,12 @@ class ContinuousBatchingSUT(BaseSUT):
                 return target + _ratio * getattr(r, "draft_tokens", 0)
 
             # picked up by PowerRun via getattr; absent -> equal split
+            self.request_energy_weight = request_energy_weight
+        elif getattr(engine, "prefix_caching", False):
+            def request_energy_weight(r):
+                return (getattr(r, "prefill_tokens", 0)
+                        + len(r.output or []))
+
             self.request_energy_weight = request_energy_weight
 
     def serve_queue(self, arrivals: list[tuple[dict, float]]) -> list:

@@ -160,6 +160,194 @@ def verify_attention_kernel(q, k, v, pos, *, block_k: int = 512,
     )(pos_arr, q, k, v)
 
 
+def _paged_kernel(pages_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr,
+                  l_scr, acc_scr, *, scale: float, page_size: int,
+                  n_pages: int, kvh: int):
+    """Page-table-indirect decode attention.
+
+    Same flash-decoding recurrence as ``_kernel``, but the KV block for
+    grid step ``(ib, ik)`` is *physical page* ``pages[ib // kvh, ik]``
+    of the shared pool — the scalar-prefetched table drives the block
+    index maps, so the DMA engine streams pages in logical order while
+    they sit anywhere in the pool.  Because K/V values at positions
+    ``<= pos`` are identical to the contiguous layout and every other
+    position is masked to ``NEG_INF`` before the softmax, the output is
+    bit-identical to ``_kernel`` for any page permutation (garbage-page
+    reads included: those rows are always masked).
+    """
+    ib = pl.program_id(0)
+    ik = pl.program_id(1)
+    del pages_ref, n_pages     # consumed by the index maps / grid
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[ib // kvh]                       # this slot's depth
+
+    @pl.when(ik * page_size <= pos)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)              # (G, d)
+        k = k_ref[0, 0].astype(jnp.float32)           # (ps, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, ps)
+        k_pos = ik * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos <= pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1)[:, None])
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1)[:, None]
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _paged_verify_kernel(pages_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale: float,
+                         page_size: int, n_pages: int, kvh: int, t: int,
+                         g: int):
+    """Multi-token verify through the page table (``_verify_kernel``
+    with paged KV blocks): window rows mask their own causal diagonal,
+    and a page is visited iff it starts at or below the window's last
+    position — windows spanning page boundaries just visit both
+    pages."""
+    ib = pl.program_id(0)
+    ik = pl.program_id(1)
+    del pages_ref, n_pages
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[ib // kvh]                       # window start
+
+    @pl.when(ik * page_size <= pos + t - 1)
+    def _step():
+        q = q_ref[0].astype(jnp.float32).reshape(t * g, -1)   # (t*g, d)
+        k = k_ref[0, 0].astype(jnp.float32)                   # (ps, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # (t*g, ps)
+        k_pos = ik * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        q_off = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // g
+        s = jnp.where(k_pos <= pos + q_off, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1)[:, None])
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1)[:, None]
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == pl.num_programs(1) - 1)
+    def _finish():
+        o = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = o.reshape(t, g, o.shape[-1]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(q, k, v, pages, pos, *,
+                                  interpret: bool = False) -> jax.Array:
+    """q: (BH, G, D) slot-major (row = slot * KVH + head); k, v:
+    (KVH, P, page_size, D) pool; pages: (B, NB) int32 page table;
+    pos: (B,) int32 per-slot depth.  Returns (BH, G, D)."""
+    bh, g, d = q.shape
+    kvh, _, page_size, _ = k.shape
+    b, nb = pages.shape
+    assert bh == b * kvh, (bh, b, kvh)
+    scale = 1.0 / math.sqrt(d)
+    kernel = functools.partial(_paged_kernel, scale=scale,
+                               page_size=page_size, n_pages=k.shape[1],
+                               kvh=kvh)
+    kv_spec = pl.BlockSpec(
+        (1, 1, page_size, d),
+        lambda ib, ik, pages, pos: (ib % kvh, pages[ib // kvh, ik], 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bh, nb),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda ib, ik, pages, pos: (ib, 0, 0)),
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=pl.BlockSpec((1, g, d),
+                               lambda ib, ik, pages, pos: (ib, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, g, d), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(pages.astype(jnp.int32), pos.astype(jnp.int32), q, k, v)
+
+
+def paged_verify_attention_kernel(q, k, v, pages, pos, *,
+                                  interpret: bool = False) -> jax.Array:
+    """q: (BH, T, G, D) slot-major; k, v: (KVH, P, page_size, D) pool;
+    pages: (B, NB) int32; pos: (B,) int32 per-slot window start.
+    Returns (BH, T, G, D)."""
+    bh, t, g, d = q.shape
+    kvh, _, page_size, _ = k.shape
+    b, nb = pages.shape
+    assert bh == b * kvh, (bh, b, kvh)
+    scale = 1.0 / math.sqrt(d)
+    kernel = functools.partial(_paged_verify_kernel, scale=scale,
+                               page_size=page_size, n_pages=k.shape[1],
+                               kvh=kvh, t=t, g=g)
+    kv_spec = pl.BlockSpec(
+        (1, 1, page_size, d),
+        lambda ib, ik, pages, pos: (ib % kvh, pages[ib // kvh, ik], 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bh, nb),
+        in_specs=[
+            pl.BlockSpec((1, t, g, d),
+                         lambda ib, ik, pages, pos: (ib, 0, 0, 0)),
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=pl.BlockSpec((1, t, g, d),
+                               lambda ib, ik, pages, pos: (ib, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((t * g, 1), jnp.float32),
+            pltpu.VMEM((t * g, 1), jnp.float32),
+            pltpu.VMEM((t * g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, t, g, d), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(pages.astype(jnp.int32), pos.astype(jnp.int32), q, k, v)
+
+
 def decode_attention_kernel(q, k, v, pos, *, block_k: int = 512,
                             interpret: bool = False) -> jax.Array:
     """q: (BH, G, D); k, v: (BH, S, D); pos: () or (BH,) int32 —

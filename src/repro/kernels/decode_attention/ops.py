@@ -22,7 +22,8 @@ from repro.analysis.contracts import (
     KernelContract, KernelInstance, OperandSpec, ScratchSpec,
 )
 from repro.kernels.decode_attention.decode_attention import (
-    decode_attention_kernel, verify_attention_kernel,
+    decode_attention_kernel, paged_decode_attention_kernel,
+    paged_verify_attention_kernel, verify_attention_kernel,
 )
 
 
@@ -92,6 +93,54 @@ def verify_attention(q, k_cache, v_cache, pos, *,
         pos = jnp.repeat(pos, kvh)
     o = verify_attention_kernel(qr, kr, vr, pos, block_k=block_k,
                                 interpret=interpret)
+    return o.reshape(b, kvh, t, g, d).transpose(0, 2, 1, 3, 4).reshape(
+        b, t, h, d)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, pages, pos, *,
+                           interpret: bool = False):
+    """Page-table-indirect decode attention in model layout.
+
+    q: (B, 1, H, D); pools: (P, page_size, KVH, D) shared physical
+    pages; pages: (B, NB) int32 per-slot page table; pos: () or (B,)
+    int32.  Returns (B, 1, H, D).  The pool is transposed to KV-head-
+    major so each grid row streams its own head's pages, and the table
+    is scalar-prefetched to drive the KV block index maps.  Values are
+    bit-identical to ``decode_attention`` on the equivalent contiguous
+    cache for any page permutation.
+    """
+    b, _, h, d = q.shape
+    kvh = k_pool.shape[2]
+    g = h // kvh
+    qr = q[:, 0].reshape(b, kvh, g, d).reshape(b * kvh, g, d)
+    kr = k_pool.transpose(2, 0, 1, 3)          # (KVH, P, ps, D)
+    vr = v_pool.transpose(2, 0, 1, 3)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    o = paged_decode_attention_kernel(qr, kr, vr, pages, pos,
+                                      interpret=interpret)
+    return o.reshape(b, h, d)[:, None]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_verify_attention(q, k_pool, v_pool, pages, pos, *,
+                           interpret: bool = False):
+    """Multi-token verify through the page table (speculative windows
+    and prefix-cache suffix prefill).
+
+    q: (B, T, H, D); pools: (P, page_size, KVH, D); pages: (B, NB)
+    int32; pos: () or (B,) int32 per-slot window start.  Returns
+    (B, T, H, D)."""
+    b, t, h, d = q.shape
+    kvh = k_pool.shape[2]
+    g = h // kvh
+    qr = q.reshape(b, t, kvh, g, d).transpose(0, 2, 1, 3, 4)
+    qr = qr.reshape(b * kvh, t, g, d)
+    kr = k_pool.transpose(2, 0, 1, 3)
+    vr = v_pool.transpose(2, 0, 1, 3)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    o = paged_verify_attention_kernel(qr, kr, vr, pages, pos,
+                                      interpret=interpret)
     return o.reshape(b, kvh, t, g, d).transpose(0, 2, 1, 3, 4).reshape(
         b, t, h, d)
 
@@ -166,6 +215,89 @@ def _verify_contract(case):
     )
 
 
+def _paged_table(case):
+    """Representative page-table closure for the contract index maps.
+
+    The real table is data (scalar-prefetched at run time); the static
+    checker never enumerates input index maps, but the contract still
+    carries a faithful callable — a fixed pseudo-random permutation of
+    the usable pages — so the indirect addressing pattern is recorded
+    alongside the blocked shapes it must stay consistent with.
+    """
+    b, nb, n_pages = case["b"], case["nb"], case["n_pages"]
+    usable = list(range(1, n_pages))
+    perm = [usable[(i * 7919) % len(usable)] for i in range(b * nb)]
+    return lambda slot, ik: perm[slot * nb + ik]
+
+
+def _paged_decode_contract(case):
+    b, nb = case["b"], case["nb"]
+    h, kvh, d = case["h"], case["kvh"], case["d"]
+    ps, n_pages = case["page_size"], case["n_pages"]
+    g = h // kvh
+    bh = b * kvh
+    dt = case.get("dtype", "bfloat16")
+    table = _paged_table(case)
+    kv_map = lambda bb, ik: (bb % kvh, table(bb // kvh, ik), 0, 0)
+    return KernelInstance(
+        grid=(bh, nb),
+        semantics=("parallel", "arbitrary"),
+        inputs=(
+            OperandSpec("pages", (b, nb), "int32", memory_space="smem"),
+            OperandSpec("pos", (b,), "int32", memory_space="smem"),
+            OperandSpec("q", (bh, g, d), dt, block=(1, g, d),
+                        index_map=lambda bb, ik: (bb, 0, 0)),
+            OperandSpec("k", (kvh, n_pages, ps, d), dt,
+                        block=(1, 1, ps, d), index_map=kv_map),
+            OperandSpec("v", (kvh, n_pages, ps, d), dt,
+                        block=(1, 1, ps, d), index_map=kv_map),
+        ),
+        outputs=(
+            OperandSpec("o", (bh, g, d), dt, block=(1, g, d),
+                        index_map=lambda bb, ik: (bb, 0, 0)),
+        ),
+        scratch=(
+            ScratchSpec((g, 1), "float32"),
+            ScratchSpec((g, 1), "float32"),
+            ScratchSpec((g, d), "float32"),
+        ),
+    )
+
+
+def _paged_verify_contract(case):
+    b, t, nb = case["b"], case["t"], case["nb"]
+    h, kvh, d = case["h"], case["kvh"], case["d"]
+    ps, n_pages = case["page_size"], case["n_pages"]
+    g = h // kvh
+    bh = b * kvh
+    dt = case.get("dtype", "bfloat16")
+    table = _paged_table(case)
+    kv_map = lambda bb, ik: (bb % kvh, table(bb // kvh, ik), 0, 0)
+    return KernelInstance(
+        grid=(bh, nb),
+        semantics=("parallel", "arbitrary"),
+        inputs=(
+            OperandSpec("pages", (b, nb), "int32", memory_space="smem"),
+            OperandSpec("pos", (b,), "int32", memory_space="smem"),
+            OperandSpec("q", (bh, t, g, d), dt, block=(1, t, g, d),
+                        index_map=lambda bb, ik: (bb, 0, 0, 0)),
+            OperandSpec("k", (kvh, n_pages, ps, d), dt,
+                        block=(1, 1, ps, d), index_map=kv_map),
+            OperandSpec("v", (kvh, n_pages, ps, d), dt,
+                        block=(1, 1, ps, d), index_map=kv_map),
+        ),
+        outputs=(
+            OperandSpec("o", (bh, t, g, d), dt, block=(1, t, g, d),
+                        index_map=lambda bb, ik: (bb, 0, 0, 0)),
+        ),
+        scratch=(
+            ScratchSpec((t * g, 1), "float32"),
+            ScratchSpec((t * g, 1), "float32"),
+            ScratchSpec((t * g, d), "float32"),
+        ),
+    )
+
+
 CONTRACTS = (
     KernelContract(
         name="decode_attention",
@@ -190,6 +322,33 @@ CONTRACTS = (
             {"b": 8, "t": 4, "s": 4096, "h": 16, "kvh": 4, "d": 128},
             {"b": 2, "t": 8, "s": 512, "h": 8, "kvh": 2, "d": 64,
              "block_k": 128},
+        ),
+        dtype_groups=(("q", "k", "v", "o"),),
+    ),
+    KernelContract(
+        name="paged_decode_attention",
+        build=_paged_decode_contract,
+        cases=(
+            # serving shape: 8 slots x 32 pages of 128 tokens (max_len
+            # 4096), pool sized one-page-per-slot-worth + garbage page
+            {"b": 8, "nb": 32, "page_size": 128, "n_pages": 257,
+             "h": 16, "kvh": 4, "d": 128},
+            # small-page CI shape (matches the engine parity tests)
+            {"b": 3, "nb": 8, "page_size": 128, "n_pages": 25,
+             "h": 8, "kvh": 2, "d": 64},
+        ),
+        dtype_groups=(("q", "k", "v", "o"),),
+    ),
+    KernelContract(
+        name="paged_verify_attention",
+        build=_paged_verify_contract,
+        cases=(
+            # speculative verify window of 4 draft tokens, paged pool
+            {"b": 8, "t": 4, "nb": 32, "page_size": 128, "n_pages": 257,
+             "h": 16, "kvh": 4, "d": 128},
+            # prefix-cache suffix prefill: longer window, fewer slots
+            {"b": 2, "t": 8, "nb": 8, "page_size": 128, "n_pages": 17,
+             "h": 8, "kvh": 2, "d": 64},
         ),
         dtype_groups=(("q", "k", "v", "o"),),
     ),

@@ -113,13 +113,18 @@ def _build_draft(args, cfg, model, params):
 
 
 def _build_continuous_engine(args, model, params, spec_kw):
+    paged_kw = {}
+    if args.kv_page_size:
+        paged_kw = dict(kv_page_size=args.kv_page_size,
+                        prefix_caching=args.prefix_cache)
     if args.tp > 1:
         return ShardedContinuousBatchingEngine(
             model, params, tp=args.tp, max_len=args.max_len,
-            n_slots=args.slots, chunk_steps=args.chunk_steps, **spec_kw)
+            n_slots=args.slots, chunk_steps=args.chunk_steps,
+            **paged_kw, **spec_kw)
     return ContinuousBatchingEngine(
         model, params, max_len=args.max_len, n_slots=args.slots,
-        chunk_steps=args.chunk_steps, **spec_kw)
+        chunk_steps=args.chunk_steps, **paged_kw, **spec_kw)
 
 
 def _serve_continuous(args, cfg, model, params):
@@ -183,6 +188,16 @@ def _serve_continuous(args, cfg, model, params):
               f"(draft {draft_cfg.name}): acceptance {acc:.2f}, "
               f"{sum(e.spec_stats['rounds'] for e in engines)} verified "
               f"slot-rounds")
+    if args.prefix_cache:
+        lookups = sum(e.prefix_stats["lookups"] for e in engines)
+        hits = sum(e.prefix_stats["hits"] for e in engines)
+        cached = sum(e.prefix_stats["cached_tokens"] for e in engines)
+        evicted = sum(e.prefix_stats["evicted_pages"] for e in engines)
+        peak = max(e.page_pool.peak_used for e in engines)
+        print(f"  prefix cache: {hits}/{lookups} hits, {cached} prompt "
+              f"tokens served from cache, {evicted} pages evicted, "
+              f"peak {peak} pages "
+              f"(page size {args.kv_page_size})")
     e = np.asarray(list((r.per_request_energy_j or {}).values()))
     if e.size:
         print(f"  per-request energy: mean {e.mean():.2f} J, "
@@ -231,6 +246,14 @@ def main(argv=None):
                     help="layers kept by --draft truncate")
     ap.add_argument("--k", type=int, default=4,
                     help="draft tokens per verify round")
+    ap.add_argument("--kv-page-size", type=int, default=0,
+                    help="paged KV cache: tokens per page (0 = the "
+                         "contiguous per-slot layout); must divide "
+                         "--max-len")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix caching over the KV pages: "
+                         "shared prompt prefixes skip their prefill "
+                         "(needs --kv-page-size)")
     ap.add_argument("--qps", type=float, default=4.0)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=8)
@@ -247,6 +270,12 @@ def main(argv=None):
     if args.speculative and args.engine != "continuous":
         ap.error("--speculative is a continuous-engine decode mode; "
                  "add --engine continuous")
+    if args.kv_page_size and args.engine != "continuous":
+        ap.error("--kv-page-size pages the continuous engine's KV "
+                 "cache; add --engine continuous")
+    if args.prefix_cache and not args.kv_page_size:
+        ap.error("--prefix-cache needs --kv-page-size (prefix pages "
+                 "are shared at page granularity)")
 
     cfg = get_config(args.arch)
     if args.reduce:

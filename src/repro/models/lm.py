@@ -146,8 +146,10 @@ class LM:
     # ------------------------------------------------------------------
     # Block application
     # ------------------------------------------------------------------
-    def _apply_block(self, x, bp, kind, mode, cache, pos):
-        """Returns (x, new_cache, aux)."""
+    def _apply_block(self, x, bp, kind, mode, cache, pos, pages=None):
+        """Returns (x, new_cache, aux).  ``pages`` (B, NB) switches the
+        attention decode/verify paths to the paged KV pool — the cache
+        leaves are then shared physical pages, not per-slot rows."""
         cfg = self.cfg
         aux = jnp.zeros((), jnp.float32)
         h = L.rmsnorm(x, bp["ln1"], cfg.norm_eps)
@@ -183,9 +185,18 @@ class LM:
             raise NotImplementedError(
                 f"speculative verify needs random-access KV attention; "
                 f"layer kind {kind!r} has no multi-token verify path")
+        if pages is not None and mix != "attn":
+            raise NotImplementedError(
+                f"paged KV needs random-access KV attention; layer kind "
+                f"{kind!r} has no page-table path")
         if mix == "attn":
             if mode == "train":
                 o = L.gqa_attention(h, bp["attn"], cfg)
+            elif mode == "verify" and pages is not None:
+                o, kvc = L.gqa_verify_paged(
+                    h, bp["attn"], cfg,
+                    {"k": cache["k"], "v": cache["v"]}, pos, pages)
+                new_cache = dict(cache, **kvc)
             elif mode == "verify":
                 o, kvc = L.gqa_verify(h, bp["attn"], cfg,
                                       {"k": cache["k"], "v": cache["v"]},
@@ -198,6 +209,11 @@ class LM:
                 v = L.pad_seq(v, s_max)
                 new_cache = dict(cache, k=shard(k, "batch", "kv_seq", None, None),
                                  v=shard(v, "batch", "kv_seq", None, None))
+            elif pages is not None:
+                o, kvc = L.gqa_decode_paged(
+                    h, bp["attn"], cfg,
+                    {"k": cache["k"], "v": cache["v"]}, pos, pages)
+                new_cache = dict(cache, **kvc)
             else:
                 o, kvc = L.gqa_decode(h, bp["attn"], cfg,
                                       {"k": cache["k"], "v": cache["v"]}, pos)
@@ -253,8 +269,11 @@ class LM:
             return jax.checkpoint(fn, policy=policy)
         return fn
 
-    def _run_stack(self, params, x, mode, cache, pos):
-        """Run all blocks; returns (x, new_cache, aux_mean)."""
+    def _run_stack(self, params, x, mode, cache, pos, pages=None):
+        """Run all blocks; returns (x, new_cache, aux_mean).  ``pages``
+        is closed over by the scan body: one page table serves every
+        layer (the pool leaves are stacked per layer, the table is
+        not)."""
         cfg = self.cfg
 
         def scan_group(x, stacked, kinds_key, cache_g):
@@ -262,7 +281,7 @@ class LM:
             def body(carry, xs):
                 bp, c = xs
                 xx, nc, aux = self._apply_block(carry, bp, kinds_key,
-                                                mode, c, pos)
+                                                mode, c, pos, pages)
                 return xx, (nc, aux)
 
             body = self._maybe_remat(body) if mode == "train" else body
@@ -426,6 +445,45 @@ class LM:
 
         return walk(specs)
 
+    # -- paged KV cache (page pool + per-slot page tables) -------------
+    def paged_cache_specs(self, batch: int, n_pages: int, page_size: int,
+                          pages_per_slot: int):
+        """ShapeDtypeStruct tree for the paged engine state: per-layer
+        K/V page *pools* shared by all slots, a per-slot ``pos`` vector,
+        and the per-slot page table.  Only homogeneous dense-attention
+        stacks are supported — paged decode needs random-access KV."""
+        cfg = self.cfg
+        kinds = set(self._layer_kinds())
+        if cfg.family not in ("dense", "moe") or not all(
+                k.startswith("attn_") for k in kinds):
+            raise NotImplementedError(
+                f"paged KV needs a homogeneous attention stack; family "
+                f"{cfg.family!r} has layer kinds {sorted(kinds)}")
+        dt = jnp.dtype(cfg.dtype)
+        pool = jax.ShapeDtypeStruct(
+            (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads,
+             cfg.head_dim), dt)
+        return {"layers": {"blocks": {"k": pool, "v": pool}},
+                "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+                "pages": jax.ShapeDtypeStruct((batch, pages_per_slot),
+                                              jnp.int32)}
+
+    def init_paged_cache(self, batch: int, n_pages: int, page_size: int,
+                         pages_per_slot: int):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.paged_cache_specs(batch, n_pages, page_size,
+                                   pages_per_slot))
+
+    def paged_cache_pspecs(self, rules):
+        """PartitionSpecs for ``paged_cache_specs``: pools partitioned
+        by KV head (the TP split), table and positions replicated."""
+        from repro.parallel.sharding import logical_pspec
+        pool = logical_pspec((None, None, None, "kv_heads", None), rules)
+        return {"layers": {"blocks": {"k": pool, "v": pool}},
+                "pos": logical_pspec(("batch",), rules),
+                "pages": logical_pspec(("batch", None), rules)}
+
     # ------------------------------------------------------------------
     # Embedding / head
     # ------------------------------------------------------------------
@@ -526,11 +584,15 @@ class LM:
         frontier and are overwritten by the next window write).
         """
         pos = cache["pos"]
+        pages = cache.get("pages")
         x = self._embed_inputs(params, {"tokens": tokens})
         x, layers, _ = self._run_stack(params, x, "verify",
-                                       cache["layers"], pos)
+                                       cache["layers"], pos, pages)
         logits = self._logits(params, x)
-        return logits, {"layers": layers, "pos": pos}
+        out = {"layers": layers, "pos": pos}
+        if pages is not None:
+            out["pages"] = pages
+        return logits, out
 
     def decode_step(self, params, cache, tokens):
         """tokens: (B, 1) -> logits (B, 1, Vp), updated cache.
@@ -540,8 +602,12 @@ class LM:
         the attention/cache ops handle either rank.
         """
         pos = cache["pos"]
+        pages = cache.get("pages")
         x = self._embed_inputs(params, {"tokens": tokens})
         x, layers, _ = self._run_stack(params, x, "decode",
-                                       cache["layers"], pos)
+                                       cache["layers"], pos, pages)
         logits = self._logits(params, x)
-        return logits, {"layers": layers, "pos": pos + 1}
+        out = {"layers": layers, "pos": pos + 1}
+        if pages is not None:
+            out["pages"] = pages
+        return logits, out

@@ -2,6 +2,10 @@ from repro.serving.engine import (  # noqa: F401
     ContinuousBatchingEngine, Request, ServeEngine,
     attribute_request_energy,
 )
+from repro.serving.kv_pages import (  # noqa: F401
+    GARBAGE_PAGE, PagePool, PoolExhausted,
+)
+from repro.serving.prefix_cache import PrefixCache  # noqa: F401
 from repro.serving.sharded import (  # noqa: F401
     ShardedContinuousBatchingEngine,
 )

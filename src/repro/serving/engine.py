@@ -33,6 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.parallel.sharding import ShardingRules, sharding_ctx, tp_ctx
+from repro.serving.kv_pages import GARBAGE_PAGE, PagePool, PoolExhausted
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.speculative import greedy_verify, speculative_sample
 
 
@@ -72,6 +74,12 @@ class Request:
                                       # mode: prefill + rounds*(k+1) —
                                       # more per emitted token at low
                                       # acceptance)
+    cached_tokens: int = 0            # prompt tokens served from the
+                                      # prefix cache (no prefill compute)
+    prefill_tokens: int = 0           # prompt tokens actually computed
+                                      # at admission (= prompt length on
+                                      # a miss; the unique suffix on a
+                                      # prefix-cache hit)
 
     def ttft_s(self) -> Optional[float]:
         if self.first_token_s is None:
@@ -176,7 +184,9 @@ class ContinuousBatchingEngine:
                  n_slots: int = 8, chunk_steps: int = 8,
                  rules: Optional[ShardingRules] = None,
                  draft_model=None, draft_params=None, spec_k: int = 0,
-                 temperature: float = 0.0, spec_seed: int = 0):
+                 temperature: float = 0.0, spec_seed: int = 0,
+                 kv_page_size: int = 0, kv_pages: Optional[int] = None,
+                 prefix_caching: bool = False):
         self.model = model
         # the model the jitted bodies trace through: ``model`` here; the
         # tensor-parallel subclass swaps in its per-shard local model
@@ -208,12 +218,43 @@ class ContinuousBatchingEngine:
         # speculative accounting (host-accumulated, reset per serve):
         # rounds/proposed/accepted over live slots, prefill token counts
         self.spec_stats = self._zero_spec_stats()
+        # paged KV: block-granular cache through a per-slot page table,
+        # with optional radix prefix caching on top (shared prompt
+        # prefixes reuse pages by refcount bump instead of re-prefilling)
+        self.page_size = int(kv_page_size)
+        self.paged = self.page_size > 0
+        self.prefix_caching = bool(prefix_caching)
+        if self.prefix_caching and not self.paged:
+            raise ValueError("prefix_caching requires kv_page_size > 0")
+        self.page_pool: Optional[PagePool] = None
+        self.prefix_cache: Optional[PrefixCache] = None
+        if self.paged:
+            if max_len % self.page_size:
+                raise ValueError(
+                    f"max_len {max_len} not a multiple of kv_page_size "
+                    f"{self.page_size}")
+            self.pages_per_slot = max_len // self.page_size
+            # +1: physical page 0 is the reserved garbage page
+            self.n_pages = (int(kv_pages) if kv_pages is not None
+                            else n_slots * self.pages_per_slot + 1)
+            if self.n_pages < self.pages_per_slot + 1:
+                raise ValueError(
+                    f"kv_pages {self.n_pages} cannot hold even one "
+                    f"full slot ({self.pages_per_slot} pages) plus the "
+                    f"garbage page")
+            self.page_pool = PagePool(self.n_pages, self.page_size)
+            if self.prefix_caching:
+                self.prefix_cache = PrefixCache(self.page_pool,
+                                                self.page_size)
+        self.prefix_stats = self._zero_prefix_stats()
         self._prefill_slot = jax.jit(self._prefill_slot_impl,
                                      donate_argnums=(2,))
         self._decode_chunk = jax.jit(self._decode_chunk_impl,
                                      donate_argnums=(1,))
         self._spec_chunk = jax.jit(self._spec_chunk_impl,
                                    donate_argnums=(2,))
+        self._extend_slot = jax.jit(self._extend_slot_impl,
+                                    donate_argnums=(2,))
         self.reset()
 
     @staticmethod
@@ -221,6 +262,11 @@ class ContinuousBatchingEngine:
         return {"rounds": 0, "proposed": 0, "accepted": 0, "emitted": 0,
                 "draft_fwd": 0, "draft_prefill_tokens": 0,
                 "target_prefill_tokens": 0}
+
+    @staticmethod
+    def _zero_prefix_stats() -> dict:
+        return {"lookups": 0, "hits": 0, "cached_tokens": 0,
+                "evicted_pages": 0}
 
     def acceptance_rate(self) -> float:
         """Fraction of proposed draft tokens the target accepted."""
@@ -230,8 +276,20 @@ class ContinuousBatchingEngine:
     # -- device state ---------------------------------------------------
     def reset(self):
         """Fresh slot state: empty cache, zero positions, no budgets."""
-        cache = self.model.init_cache(self.n_slots, self.max_len,
-                                      per_slot_pos=True)
+        if self.paged:
+            cache = self.model.init_paged_cache(
+                self.n_slots, self.n_pages, self.page_size,
+                self.pages_per_slot)
+            self.page_pool.reset()
+            if self.prefix_cache is not None:
+                self.prefix_cache.reset()
+            # host shadow of page ownership: pages each slot holds a
+            # reference on (the device side only sees the table row)
+            self._slot_pages: list[list[int]] = [
+                [] for _ in range(self.n_slots)]
+        else:
+            cache = self.model.init_cache(self.n_slots, self.max_len,
+                                          per_slot_pos=True)
         self.state = {
             "cache": cache,
             "tok": jnp.zeros((self.n_slots,), jnp.int32),
@@ -244,7 +302,7 @@ class ContinuousBatchingEngine:
                 self.state["key"] = jax.random.PRNGKey(self.spec_seed)
 
     def _prefill_slot_impl(self, params, dparams, state, tokens, slot,
-                           budget):
+                           budget, pages=None):
         """Prefill one prompt and splice it into slot ``slot``.
 
         ``tokens``: (1, S) prompt.  The batch-1 prefill cache is
@@ -255,6 +313,14 @@ class ContinuousBatchingEngine:
         speculative mode the draft model prefills the same prompt into
         its own cache (outside any tensor-parallel context — the draft
         runs replicated), so drafting starts aligned with the target.
+
+        Paged mode passes ``pages`` (the slot's full page-table row,
+        (pages_per_slot,) int32): the contiguous batch-1 prefill cache
+        is chopped into page_size blocks and scattered at the row's
+        physical pages.  Padded row entries are the garbage page 0, so
+        the blocks past the request's allocation land there — page 0's
+        contents are only ever read through masked (score = -1e30)
+        attention positions, so clobbering it is harmless.
         """
 
         def splice(cache, logits_and_one):
@@ -266,13 +332,29 @@ class ContinuousBatchingEngine:
             pos = cache["pos"].at[slot].set(one["pos"].astype(jnp.int32))
             return {"layers": layers, "pos": pos}
 
+        def splice_paged(cache, one):
+            pps = pages.shape[0]
+            ps = self.page_size
+
+            def scatter(pool, small):
+                blocks = small[:, 0].reshape(
+                    small.shape[0], pps, ps, *pool.shape[3:])
+                return pool.at[:, pages].set(blocks.astype(pool.dtype))
+
+            layers = jax.tree.map(scatter, cache["layers"],
+                                  one["layers"])
+            pos = cache["pos"].at[slot].set(one["pos"].astype(jnp.int32))
+            table = cache["pages"].at[slot].set(pages)
+            return {"layers": layers, "pos": pos, "pages": table}
+
         with sharding_ctx(self.rules):
             logits, one = self.compute_model.prefill(
                 params, {"tokens": tokens}, max_len=self.max_len)
         tok0 = jnp.argmax(logits[0, -1], -1).astype(jnp.int32)
         new = dict(
             state,
-            cache=splice(state["cache"], (logits, one)),
+            cache=(splice_paged(state["cache"], one) if pages is not None
+                   else splice(state["cache"], (logits, one))),
             tok=state["tok"].at[slot].set(tok0),
             remaining=state["remaining"].at[slot].set(
                 jnp.maximum(budget - 1, 0)),
@@ -283,6 +365,55 @@ class ContinuousBatchingEngine:
                     dparams, {"tokens": tokens}, max_len=self.max_len)
             new["draft_cache"] = splice(state["draft_cache"],
                                         (dlogits, done))
+        return new, tok0
+
+    def _extend_slot_impl(self, params, dparams, state, tokens, suffix,
+                          slot, pages, start, budget):
+        """Admit a prefix-cache hit: only the unique suffix is computed.
+
+        ``tokens``: (1, S) full prompt; ``suffix``: (1, S - start) the
+        part not covered by cached pages (``lookup`` guarantees it is
+        non-empty).  K/V are stored post-RoPE at absolute positions, so
+        the shared pages already hold exactly what a full prefill would
+        have written; the suffix runs through a batch-1 paged
+        ``verify_step`` sharing the engine's pool leaves, starting at
+        absolute position ``start``, and its last logit row seeds
+        decoding just like a full prefill.  In speculative mode the
+        draft still prefills the *full* prompt — its contiguous cache
+        has no pages to share.
+        """
+        cache = state["cache"]
+        mini = {"layers": cache["layers"],
+                "pos": start[None].astype(jnp.int32),
+                "pages": pages[None]}
+        with sharding_ctx(self.rules):
+            logits, mini = self.compute_model.verify_step(
+                params, mini, suffix)
+        tok0 = jnp.argmax(logits[0, -1], -1).astype(jnp.int32)
+        pos = cache["pos"].at[slot].set(
+            (start + suffix.shape[1]).astype(jnp.int32))
+        table = cache["pages"].at[slot].set(pages)
+        new = dict(
+            state,
+            cache={"layers": mini["layers"], "pos": pos, "pages": table},
+            tok=state["tok"].at[slot].set(tok0),
+            remaining=state["remaining"].at[slot].set(
+                jnp.maximum(budget - 1, 0)),
+        )
+        if self.speculative:
+            with sharding_ctx(None), tp_ctx(None):
+                dlogits, done = self.draft_compute_model.prefill(
+                    dparams, {"tokens": tokens}, max_len=self.max_len)
+            dc = state["draft_cache"]
+            dlayers = jax.tree.map(
+                lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+                    big, small.astype(big.dtype), slot, axis=1),
+                dc["layers"], done["layers"])
+            new["draft_cache"] = {
+                "layers": dlayers,
+                "pos": dc["pos"].at[slot].set(
+                    done["pos"].astype(jnp.int32)),
+            }
         return new, tok0
 
     def _decode_chunk_impl(self, params, state):
@@ -450,6 +581,86 @@ class ContinuousBatchingEngine:
         pad = jnp.arange(logits.shape[-1]) >= vocab
         return jnp.where(pad, -1e30, logits)
 
+    # -- paged admission (host side) -------------------------------------
+    def _alloc_pages(self, n: int) -> list[int]:
+        """Allocate ``n`` pages, evicting cache-only prefix pages under
+        memory pressure.  Raises ``PoolExhausted`` when eviction cannot
+        free enough (every remaining page is pinned by a live slot)."""
+        pool = self.page_pool
+        if n > pool.free_pages() and self.prefix_cache is not None:
+            self.prefix_stats["evicted_pages"] += self.prefix_cache.evict(
+                n - pool.free_pages())
+        return pool.alloc(n)
+
+    def _release_slot(self, b: int) -> None:
+        """Drop a retired slot's page references, aiming its table row
+        at the garbage page *first*: the frozen chunk loop keeps
+        scattering at the dead slot's position, and those writes must
+        not land on pages that may be reallocated to another request."""
+        if not self.paged:
+            return
+        cache = self.state["cache"]
+        self.state["cache"] = dict(
+            cache, pages=cache["pages"].at[b].set(GARBAGE_PAGE))
+        for p in self._slot_pages[b]:
+            self.page_pool.unref(p)
+        self._slot_pages[b] = []
+
+    def _admit_paged(self, r: Request, slot: int, prompt) -> Any:
+        """Admit one request into ``slot`` under the page allocator.
+
+        Order matters: prefix-cache hit pages are ``ref``-ed *before*
+        allocating fresh pages, because allocation may evict — pinning
+        first means eviction can never free a page this request is
+        about to read.  On ``PoolExhausted`` the pins are rolled back
+        and the exception propagates (the caller defers admission).
+        """
+        ps = self.page_size
+        s = int(prompt.shape[1])
+        n_blocks = min(self.pages_per_slot,
+                       -(-(s + r.max_new_tokens + self.spec_k) // ps))
+        toks = tuple(int(x) for x in np.asarray(r.prompt).reshape(-1))
+        shared = (self.prefix_cache.lookup(toks)
+                  if self.prefix_cache is not None else [])
+        for p in shared:
+            self.page_pool.ref(p)
+        try:
+            fresh = self._alloc_pages(n_blocks - len(shared))
+        except PoolExhausted:
+            for p in shared:
+                self.page_pool.unref(p)
+            raise
+        if self.prefix_cache is not None:
+            self.prefix_stats["lookups"] += 1
+            if shared:
+                self.prefix_stats["hits"] += 1
+                self.prefix_stats["cached_tokens"] += len(shared) * ps
+        row = shared + fresh
+        self._slot_pages[slot] = list(row)
+        row_arr = jnp.asarray(
+            row + [GARBAGE_PAGE] * (self.pages_per_slot - len(row)),
+            jnp.int32)
+        start = len(shared) * ps
+        r.cached_tokens = start
+        r.prefill_tokens = s - start
+        budget = jnp.asarray(r.max_new_tokens, jnp.int32)
+        if start:
+            self.state, tok0 = self._extend_slot(
+                self.params, self.draft_params, self.state, prompt,
+                prompt[:, start:], jnp.asarray(slot, jnp.int32),
+                row_arr, jnp.asarray(start, jnp.int32), budget)
+        else:
+            self.state, tok0 = self._prefill_slot(
+                self.params, self.draft_params, self.state, prompt,
+                jnp.asarray(slot, jnp.int32), budget, row_arr)
+        if self.prefix_cache is not None:
+            # intern only *full* prompt blocks: a partial last block
+            # still receives this slot's decode writes, so sharing it
+            # would let another request read tokens that aren't prompt
+            n_full = min(s // ps, n_blocks)
+            self.prefix_cache.insert(toks[:n_full * ps], row[:n_full])
+        return tok0
+
     # -- host orchestration ---------------------------------------------
     def serve(self, requests: list[Request],
               now: Callable[[], float] = time.monotonic,
@@ -474,6 +685,7 @@ class ContinuousBatchingEngine:
                 f"the loadgen qid, repro.core.loadgen.qid_of)")
         self.reset()
         self.spec_stats = self._zero_spec_stats()
+        self.prefix_stats = self._zero_prefix_stats()
         self.host_syncs = 0            # per-serve, like spec_stats
         queue = collections.deque(
             sorted(requests, key=lambda r: (r.arrival_s, r.rid)))
@@ -497,24 +709,41 @@ class ContinuousBatchingEngine:
                         <= self.max_len), \
                     (prompt.shape[1], r.max_new_tokens, self.spec_k,
                      self.max_len)
-                self.state, tok0 = self._prefill_slot(
-                    self.params, self.draft_params, self.state, prompt,
-                    jnp.asarray(b, jnp.int32),
-                    jnp.asarray(r.max_new_tokens, jnp.int32))
+                if self.paged:
+                    try:
+                        tok0 = self._admit_paged(r, b, prompt)
+                    except PoolExhausted as exc:
+                        if not any(s is not None for s in slots):
+                            raise RuntimeError(
+                                f"request {r.rid} needs more KV pages "
+                                f"than eviction can ever free (pool of "
+                                f"{self.page_pool.n_pages - 1} usable "
+                                f"pages)") from exc
+                        # defer: a retiring slot will free its pages
+                        queue.appendleft(r)
+                        break
+                else:
+                    r.prefill_tokens = int(prompt.shape[1])
+                    self.state, tok0 = self._prefill_slot(
+                        self.params, self.draft_params, self.state,
+                        prompt, jnp.asarray(b, jnp.int32),
+                        jnp.asarray(r.max_new_tokens, jnp.int32))
                 first = int(tok0)          # blocks -> true TTFT
                 r.first_token_s = now() - t0
                 r.output = [first][: r.max_new_tokens]  # budget 0 -> []
                 if self.speculative:
-                    # the draft prefilled the prompt alongside the target
+                    # the draft prefilled the full prompt alongside the
+                    # target, which only computed the uncached part
+                    computed = int(prompt.shape[1]) - r.cached_tokens
                     r.draft_tokens += int(prompt.shape[1])
-                    r.verify_tokens += int(prompt.shape[1])
+                    r.verify_tokens += computed
                     self.spec_stats["draft_prefill_tokens"] += \
                         int(prompt.shape[1])
-                    self.spec_stats["target_prefill_tokens"] += \
-                        int(prompt.shape[1])
+                    self.spec_stats["target_prefill_tokens"] += computed
                 if r.max_new_tokens <= 1:
                     r.done_s = r.first_token_s
                     done.append(r)
+                    self._release_slot(b)
                 else:
                     slots[b] = r
                     slot_left[b] = r.max_new_tokens - 1
@@ -565,6 +794,7 @@ class ContinuousBatchingEngine:
                     r.done_s = t_chunk
                     done.append(r)
                     slots[b] = None
+                    self._release_slot(b)
         return done
 
     def tokens_per_request(self, requests: list[Request]) -> int:

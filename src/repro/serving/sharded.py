@@ -100,7 +100,15 @@ class ShardedContinuousBatchingEngine(ContinuousBatchingEngine):
         local_cfg = tp_local_config(cfg, self.tp)
         rules = make_tp_rules(cfg, mesh, axis)
         self._param_specs = param_pspecs(model.param_defs(), rules)
-        self._cache_specs = model.cache_pspecs(rules, per_slot_pos=True)
+        # paged mode (kw is parsed by super().__init__, but the cache
+        # specs must exist first): the page pool partitions by KV head
+        # exactly like the contiguous cache; page tables and positions
+        # are replicated host-managed indices
+        if kw.get("kv_page_size"):
+            self._cache_specs = model.paged_cache_pspecs(rules)
+        else:
+            self._cache_specs = model.cache_pspecs(rules,
+                                                   per_slot_pos=True)
         if kw.get("rules") is not None:
             raise ValueError("ShardedContinuousBatchingEngine manages its "
                              "own sharding; rules must be None")
@@ -134,14 +142,26 @@ class ShardedContinuousBatchingEngine(ContinuousBatchingEngine):
                          out_specs=out_specs, check_rep=False)
 
     def _prefill_slot_impl(self, params, dparams, state, tokens, slot,
-                           budget):
+                           budget, pages=None):
         base = super()._prefill_slot_impl
+        extra = () if pages is None else (pages,)
         return self._shard_mapped(
             base,
             in_specs=(self._param_specs, self._dparam_specs,
-                      self._state_specs) + (P(),) * 3,
+                      self._state_specs) + (P(),) * (3 + len(extra)),
             out_specs=(self._state_specs, P()),
-        )(params, dparams, state, tokens, slot, budget)
+        )(params, dparams, state, tokens, slot, budget, *extra)
+
+    def _extend_slot_impl(self, params, dparams, state, tokens, suffix,
+                          slot, pages, start, budget):
+        base = super()._extend_slot_impl
+        return self._shard_mapped(
+            base,
+            in_specs=(self._param_specs, self._dparam_specs,
+                      self._state_specs) + (P(),) * 6,
+            out_specs=(self._state_specs, P()),
+        )(params, dparams, state, tokens, suffix, slot, pages, start,
+          budget)
 
     def _decode_chunk_impl(self, params, state):
         base = super()._decode_chunk_impl

@@ -197,6 +197,24 @@ class TestPurityRules:
         assert _rules(out) == ["PUR002"]
         assert "lax.cond" in out[0].hint
 
+    def test_none_presence_branch_not_pur002(self, tmp_path):
+        """``x is None`` / ``x is not None`` on a traced parameter is a
+        structural pytree-presence test (e.g. an optional page-table
+        argument), resolved per trace — never a tracer in boolean
+        context, so it must not fire PUR002."""
+        _write_tree(tmp_path, "f.py", """
+            import jax
+
+            @jax.jit
+            def splice(cache, pages):
+                if pages is not None:
+                    return cache + pages
+                if pages is None:
+                    return cache
+        """)
+        out = pur.run(str(tmp_path), subdirs=("f.py",))
+        assert _rules(out) == []
+
     def test_static_argnames_exempt(self, tmp_path):
         _write_tree(tmp_path, "f.py", """
             import jax

@@ -1,0 +1,210 @@
+"""Paged KV cache + radix prefix cache: allocator invariants, page-table
+permutation bit-identity, engine-level token parity with the contiguous
+layout, prefix-hit accounting, and qid conservation under page-pool
+pressure."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.core.loadgen import run_server_queue, QuerySampleLibrary
+from repro.models import build_model
+from repro.models.param import init_params
+from repro.serving import (ContinuousBatchingEngine, GARBAGE_PAGE,
+                           PagePool, PoolExhausted, PrefixCache, Request)
+
+
+def _build(arch="qwen3-1.7b", **overrides):
+    cfg = reduce_config(get_config(arch))
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    model = build_model(cfg)
+    params = init_params(model.param_defs(), jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mixed_requests(budgets, prompt_len=8):
+    return [Request(rid=i, prompt=np.arange(prompt_len) + 3 * i,
+                    max_new_tokens=b) for i, b in enumerate(budgets)]
+
+
+def _shared_prefix_requests(n=4, shared_len=16, budget=6):
+    shared = list(np.arange(shared_len) + 100)
+    return [Request(rid=i, prompt=np.asarray(shared + [200 + i, 201 + i]),
+                    max_new_tokens=budget) for i in range(n)]
+
+
+# --- PagePool ------------------------------------------------------------
+
+def test_pagepool_basics():
+    pool = PagePool(6, 8)
+    assert pool.free_pages() == 5          # page 0 reserved
+    a = pool.alloc(3)
+    assert GARBAGE_PAGE not in a and len(set(a)) == 3
+    assert pool.used_pages() == 3 and pool.peak_used == 3
+    # all-or-nothing: a failed alloc leaves the free list untouched
+    with pytest.raises(PoolExhausted):
+        pool.alloc(3)
+    assert pool.free_pages() == 2
+    pool.ref(a[0])
+    pool.unref(a[0])
+    assert pool.used_pages() == 3          # still one owner
+    pool.unref(a[0])
+    assert pool.free_pages() == 3          # last owner freed it
+    with pytest.raises(ValueError):
+        pool.unref(a[0])                   # double free
+    with pytest.raises(ValueError):
+        pool.ref(a[0])                     # ref of a free page
+    with pytest.raises(ValueError):
+        pool.ref(GARBAGE_PAGE)
+
+
+def test_pagepool_order_is_reset_stable():
+    order = [3, 1, 4, 2]
+    pool = PagePool(5, 4, order=order)
+    assert pool.alloc(4) == order
+    pool.reset()
+    assert pool.alloc(2) == order[:2]
+    with pytest.raises(ValueError):
+        PagePool(5, 4, order=[0, 1, 2, 3])   # page 0 is reserved
+
+
+# --- PrefixCache ---------------------------------------------------------
+
+def test_prefix_cache_lookup_never_covers_whole_prompt():
+    """A hit must leave >= 1 uncached token (the extend path needs a
+    non-empty suffix to produce the next-token logits)."""
+    pool = PagePool(16, 4)
+    cache = PrefixCache(pool, 4)
+    toks = tuple(range(8))                 # exactly 2 full pages
+    cache.insert(toks, pool.alloc(2))
+    assert len(cache.lookup(toks)) == 1    # capped at (len-1)//ps
+    assert len(cache.lookup(toks + (9,))) == 2
+
+
+def test_prefix_cache_interns_full_pages_only():
+    pool = PagePool(16, 4)
+    cache = PrefixCache(pool, 4)
+    pages = pool.alloc(3)
+    cache.insert(tuple(range(10)), pages)  # 2.5 pages -> 2 interned
+    assert cache.cached_tokens == 8
+    # the interned pages picked up the cache's reference
+    assert pool.refcount[pages[0]] == 2
+    assert pool.refcount[pages[2]] == 1    # partial page not interned
+
+
+def test_prefix_cache_eviction_skips_referenced_pages():
+    pool = PagePool(16, 4)
+    cache = PrefixCache(pool, 4)
+    live = pool.alloc(2)
+    cache.insert(tuple(range(8)), live)    # refcount 2: slot + cache
+    dead = pool.alloc(2)
+    cache.insert(tuple(range(100, 108)), dead)
+    for p in dead:
+        pool.unref(p)                      # cache is the only owner
+    freed = cache.evict(4)
+    assert freed == 2                      # only the cache-only pages
+    assert all(pool.refcount[p] == 2 for p in live)
+    assert cache.lookup(tuple(range(8)) + (9,)) == live
+
+
+# --- engine parity -------------------------------------------------------
+
+def test_paged_engine_matches_contiguous_shuffled_order():
+    """Greedy token identity vs the contiguous engine, with the page
+    pool handing out physical pages in a shuffled order."""
+    cfg, model, params = _build()
+    budgets = [4, 7, 3, 6]
+    ref = ContinuousBatchingEngine(model, params, max_len=48, n_slots=2,
+                                   chunk_steps=3)
+    want = {r.rid: r.output
+            for r in ref.serve(_mixed_requests(budgets),
+                               honor_arrivals=False)}
+
+    eng = ContinuousBatchingEngine(model, params, max_len=48, n_slots=2,
+                                   chunk_steps=3, kv_page_size=8)
+    order = list(np.random.default_rng(3).permutation(
+        np.arange(1, eng.n_pages)))
+    eng.page_pool = PagePool(eng.n_pages, eng.page_size, order=order)
+    eng.reset()
+    done = eng.serve(_mixed_requests(budgets), honor_arrivals=False)
+    got = {r.rid: r.output for r in done}
+    assert got == want
+    # every page the retired slots held went back to the pool
+    assert eng.page_pool.used_pages() == 0
+
+
+def test_prefix_hit_token_identity_and_accounting():
+    """Requests sharing a 16-token prefix: hits skip the shared pages'
+    prefill, produce identical tokens, and bill only the unique
+    suffix."""
+    cfg, model, params = _build()
+    ref = ContinuousBatchingEngine(model, params, max_len=48, n_slots=2,
+                                   chunk_steps=3)
+    want = {r.rid: r.output
+            for r in ref.serve(_shared_prefix_requests(),
+                               honor_arrivals=False)}
+
+    eng = ContinuousBatchingEngine(model, params, max_len=48, n_slots=2,
+                                   chunk_steps=3, kv_page_size=8,
+                                   prefix_caching=True)
+    done = eng.serve(_shared_prefix_requests(), honor_arrivals=False)
+    assert {r.rid: r.output for r in done} == want
+    assert eng.prefix_stats["hits"] == 3   # first request misses
+    hits = [r for r in done if r.cached_tokens]
+    assert len(hits) == 3
+    for r in hits:
+        assert r.cached_tokens == 16 and r.prefill_tokens == 2
+    misses = [r for r in done if not r.cached_tokens]
+    assert all(r.prefill_tokens == 18 for r in misses)
+
+
+def test_speculative_paged_parity_across_page_boundaries():
+    """Speculative verify with paged KV: rollback of rejected draft
+    tokens must work when the verify window spans a page boundary."""
+    cfg, model, params = _build()
+    budgets = [6, 4, 9]                    # crosses 8-token pages
+    ref = ContinuousBatchingEngine(model, params, max_len=48, n_slots=2,
+                                   chunk_steps=3, draft_model=model,
+                                   draft_params=params, spec_k=2)
+    want = {r.rid: r.output
+            for r in ref.serve(_mixed_requests(budgets),
+                               honor_arrivals=False)}
+    eng = ContinuousBatchingEngine(model, params, max_len=48, n_slots=2,
+                                   chunk_steps=3, draft_model=model,
+                                   draft_params=params, spec_k=2,
+                                   kv_page_size=8, prefix_caching=True)
+    done = eng.serve(_mixed_requests(budgets), honor_arrivals=False)
+    assert {r.rid: r.output for r in done} == want
+
+
+def test_eviction_under_pressure_conserves_qids():
+    """A pool sized so cache-resident prefix pages must be evicted to
+    admit new requests: every admitted qid still completes exactly once
+    (run_server_queue raises on lost/duplicated qids)."""
+    cfg, model, params = _build()
+    # 9 usable pages vs 2 slots x 3 pages live + 2 cached pages per
+    # distinct prompt (3 prompts rotate): admission routinely needs
+    # eviction of LRU prefix pages
+    eng = ContinuousBatchingEngine(model, params, max_len=48, n_slots=2,
+                                   chunk_steps=3, kv_page_size=8,
+                                   kv_pages=10, prefix_caching=True)
+    from repro.harness import ContinuousBatchingSUT
+
+    def make_request(i, sample, arrival_s):
+        rid = sample["qid"]
+        return Request(rid=rid, prompt=np.arange(16) + (rid % 3),
+                       max_new_tokens=4, arrival_s=float(arrival_s))
+
+    sut = ContinuousBatchingSUT(eng, cfg, make_request=make_request)
+    qsl = QuerySampleLibrary(8, lambda i: {"idx": i})
+    m = run_server_queue(sut.serve_queue, qsl, target_qps=500.0,
+                         latency_slo_s=30.0, min_duration_s=0.0,
+                         seed=1, min_queries=12)
+    assert m.result.n_queries == 12        # conservation (would raise)
+    assert eng.prefix_stats["evicted_pages"] > 0
+    # all slots retired: the only pages still owned are the cache's
+    assert eng.page_pool.used_pages() == eng.prefix_cache.n_nodes

@@ -1,0 +1,88 @@
+"""Property-based tests (hypothesis) on the paged-KV invariants: the
+page-pool refcounting protocol under arbitrary traffic, and page-table
+permutation bit-identity of the paged attention kernels."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dep: property tests are skipped, not collection-fatal")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving import GARBAGE_PAGE, PagePool, PoolExhausted
+
+
+@given(ops=st.lists(st.integers(0, 2 ** 30), min_size=1, max_size=200),
+       n_pages=st.integers(2, 17))
+@settings(max_examples=100, deadline=None)
+def test_pagepool_refcount_conservation(ops, n_pages):
+    """Under arbitrary alloc/ref/unref traffic: a referenced page is
+    never on the free list, page 0 is never handed out, and used + free
+    always equals the usable pool."""
+    pool = PagePool(n_pages, 4)
+    live: list[int] = []                   # one entry per owner
+    for op in ops:
+        kind = op % 3
+        if kind == 0:
+            n = op % (n_pages // 2 + 1)
+            try:
+                got = pool.alloc(n)
+            except PoolExhausted:
+                assert n > pool.free_pages()
+            else:
+                assert GARBAGE_PAGE not in got
+                live.extend(got)
+        elif kind == 1 and live:
+            page = live[op % len(live)]
+            pool.ref(page)
+            live.append(page)
+        elif kind == 2 and live:
+            pool.unref(live.pop(op % len(live)))
+        assert pool.used_pages() + pool.free_pages() == n_pages - 1
+        for page in set(live):
+            assert pool.refcount[page] == live.count(page)
+            assert page not in pool._free
+    shared = [p for p in set(live) if live.count(p) > 1]
+    for page in shared:
+        assert pool.refcount[page] > 1     # shared pages still owned
+
+
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       pos=st.lists(st.integers(0, 31), min_size=2, max_size=2))
+@settings(max_examples=8, deadline=None)
+def test_paged_attention_permutation_bit_identity(seed, pos):
+    """Any page-table permutation of the KV pool is bit-identical to
+    the contiguous layout at equal block size — the page indirection
+    changes only *where* a block lives, never the arithmetic."""
+    from repro.kernels.decode_attention.ops import (
+        decode_attention, paged_decode_attention)
+
+    b, h, kvh, d, ps, nb = 2, 4, 2, 16, 8, 4
+    n_pages = b * nb + 1
+    rng = np.random.default_rng(seed)
+    kc = jnp.asarray(rng.standard_normal((b, nb * ps, kvh, d)),
+                     jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((b, nb * ps, kvh, d)),
+                     jnp.float32)
+    q = jnp.asarray(rng.standard_normal((b, 1, h, d)), jnp.float32)
+    posv = jnp.asarray(pos, jnp.int32)
+
+    tables = rng.permutation(np.arange(1, n_pages))[:b * nb] \
+        .reshape(b, nb)
+    k_pool = jnp.asarray(rng.standard_normal((n_pages, ps, kvh, d)),
+                         jnp.float32)
+    v_pool = jnp.asarray(rng.standard_normal((n_pages, ps, kvh, d)),
+                         jnp.float32)
+    for bb in range(b):
+        for i in range(nb):
+            k_pool = k_pool.at[tables[bb, i]].set(
+                kc[bb, i * ps:(i + 1) * ps])
+            v_pool = v_pool.at[tables[bb, i]].set(
+                vc[bb, i * ps:(i + 1) * ps])
+
+    ref = decode_attention(q, kc, vc, posv, block_k=ps, interpret=True)
+    out = paged_decode_attention(q, k_pool, v_pool,
+                                 jnp.asarray(tables, jnp.int32), posv,
+                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
