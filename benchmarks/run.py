@@ -26,8 +26,9 @@ def main(argv=None) -> None:
                             power_range, prefix_cache,
                             quantization_efficiency, resilience,
                             roofline_table, scale_sweep, scaling_energy,
-                            serving_throughput, speculative_efficiency,
-                            sw_hw_optimizations, tiny_edge_measured)
+                            serving_throughput, slo_sweep,
+                            speculative_efficiency, sw_hw_optimizations,
+                            tiny_edge_measured)
 
     modules = [
         ("fig2_power_range", power_range),
@@ -45,6 +46,7 @@ def main(argv=None) -> None:
         ("power_breakdown", power_breakdown),
         ("resilience", resilience),
         ("prefix_cache", prefix_cache),
+        ("slo_sweep", slo_sweep),
     ]
     print("name,us_per_call,derived")
     n_rows = 0

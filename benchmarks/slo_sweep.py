@@ -1,0 +1,368 @@
+"""Max sustainable QPS at a fixed TTFT/TPOT tail SLO, per joule.
+
+The Server-scenario capacity question the SLO-aware serving stack
+exists to answer: on a bimodal prompt mix (short interactive queries
++ long context-stuffing queries), how many queries per second can
+each engine configuration sustain while the *interactive* class keeps
+meeting its time-to-first-token SLO — and what does that capacity
+cost in watts?  Four configurations share one geometry and one tight
+page pool:
+
+- **monolithic**  — paged KV, whole-prompt prefill at admission: a
+  short arriving behind a long prompt waits the full prefill
+  (head-of-line blocking), so attainment collapses as long-prompt
+  traffic grows;
+- **chunked**     — ``prefill_chunk_tokens`` splits every prefill
+  into chunks interleaved with decode chunks: shorts slip in between
+  a long's chunks and decoding slots never stall;
+- **chunked_preempt** — chunked + ``Scheduler(preemption=True)``:
+  deadline-slack admission ordering, and under page-pool pressure a
+  low-priority long is parked (pages evicted, state host-side) so the
+  short admits immediately; the long resumes bit-identically through
+  the prefix-cache extend path;
+- **disaggregated** — prefill and decode as separate fleets
+  (``PrefillWorker`` x2 -> paged KV handoff -> decode engine), each
+  behind its own ``PowerDomain`` stack, so the prefill-vs-decode
+  energy split is *measured* per boundary channel, not modeled.
+
+Every timing knob is calibrated to the measured warm monolithic
+long-prompt prefill time ``t_long`` (the SLO is ``SLO_FRAC x
+t_long``, the offered-QPS grid is ``GRID_x / t_long``), so the
+collision geometry — which shorts land behind which longs — is
+machine-speed invariant and the gate baselines transfer across
+hosts.  Arrivals are Poisson at a fixed seed: deterministic given
+the grid point.
+
+Reported per configuration (group ``qps_at_slo_per_j`` in the perf
+gate): ``tokens_per_s`` / ``tok_per_j`` at the shared mid grid point
+(throughput + efficiency at equal offered load), ``qps_at_slo``
+(``repro.core.efficiency.max_sustainable_qps`` over the grid at
+``ATTAIN_BAR`` short-class attainment), ``qps_at_slo_per_j``
+(capacity per watt at the sustaining point), the per-point
+attainments, and for the preemptive config the gated ``speedup`` =
+its sustainable QPS over monolithic's — the acceptance bar that
+chunked+preempt strictly beats monolithic.  The disaggregated row
+adds ``prefill_j`` / ``decode_j`` / ``prefill_energy_frac`` from the
+two fleets' measured wall channels.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+LONG_LEN = 768                  # context-stuffing prompt (12 pages)
+SHORT_LEN = 16                  # interactive prompt (1 page w/ budget)
+MAX_LEN = 832                   # 13 pages per slot
+PAGE_SIZE = 64
+SLOTS = 8                       # slots are not the binding constraint
+KV_PAGES = 27                   # two resident longs fill the pool: the
+                                # third concurrent context must wait
+                                # (monolithic/chunked) or preempt
+CHUNK_STEPS = 2                 # decode tokens per fused chunk
+PREFILL_CHUNK = 64              # chunked-prefill tokens per iteration
+NEW_TOKENS = 8                  # decode budget (both classes)
+LONG_PERIOD = 8                 # arrival pattern period ...
+LONG_SLOTS = (0, 5)             # ... longs at these offsets (25 %,
+                                # alternating parity so the disagg
+                                # round-robin splits them evenly)
+SLO_FRAC = 0.35                 # ttft_slo = SLO_FRAC * t_long
+TPOT_FRAC = 0.5                 # tpot_slo = TPOT_FRAC * t_long (loose:
+                                # the sweep discriminates on TTFT)
+ATTAIN_BAR = 0.9                # short-class TTFT attainment bar
+GRID_X = (0.4, 1.0, 2.0)        # offered qps = x / t_long (smoke)
+GRID_X_FULL = (0.4, 0.8, 1.2, 1.6, 2.0, 2.4)
+MID = 1                         # grid index for the fixed-load
+                                # tokens_per_s / tok_per_j comparison
+N_PREFILL_WORKERS = 2
+SEED = 0                        # Poisson arrival schedule seed
+
+
+def _is_long(i: int) -> bool:
+    return i % LONG_PERIOD in LONG_SLOTS
+
+
+def _prompt(cfg, i: int) -> np.ndarray:
+    """Deterministic per-arrival-index prompts, unique content per
+    request so the prefix cache in the preemptive config never
+    cross-hits between requests (only park/resume reuses pages)."""
+    n = LONG_LEN if _is_long(i) else SHORT_LEN
+    rng = np.random.default_rng(20_000 + i)
+    return rng.integers(0, cfg.vocab_size, n).astype(np.int64)
+
+
+def _make_request(cfg, rid: int, i: int, arrival_s: float,
+                  ttft_slo_s: float):
+    """Shorts are the interactive class: priority 1 with a deadline at
+    arrival + SLO (drives the scheduler's slack ordering); longs are
+    best-effort priority 0 — the preemption victims."""
+    from repro.serving import Request
+
+    short = not _is_long(i)
+    return Request(
+        rid=rid, prompt=_prompt(cfg, i), max_new_tokens=NEW_TOKENS,
+        arrival_s=float(arrival_s),
+        priority=1 if short else 0,
+        deadline_s=float(arrival_s) + ttft_slo_s if short else None)
+
+
+def _warm(engine, cfg, *, chunked: bool, prefix: bool) -> None:
+    """Compile every shape outside the measurement: long + short
+    prefill (monolithic or chunked), a decode chunk, and for the
+    prefix-caching config the intern + extend (resume) paths.
+
+    The two opposite-order serves matter for the disaggregated
+    engine: its round-robin worker assignment would otherwise leave
+    one prefill worker having only ever compiled one prompt shape,
+    and the first short on the other worker would pay a mid-
+    measurement XLA compile that reads as an SLO miss."""
+    from repro.serving import Request
+
+    def req(j, n):
+        rng = np.random.default_rng(5_000 + j)
+        return Request(rid=10 ** 6 + j,
+                       prompt=rng.integers(0, cfg.vocab_size, n),
+                       max_new_tokens=NEW_TOKENS)
+
+    engine.serve([req(0, LONG_LEN), req(1, SHORT_LEN)],
+                 honor_arrivals=False)
+    engine.serve([req(2, SHORT_LEN), req(3, LONG_LEN)],
+                 honor_arrivals=False)
+    if prefix:
+        # re-offering the long compiles the full-prefix-hit extend;
+        # the +k tails compile the park/resume shapes — a parked long
+        # resumes with prompt' = prompt + output where a chunk-
+        # aligned park leaves len(output) odd (first token + 2/chunk)
+        # and 768 cached tokens, i.e. extend tails of 1/3/5/7 tokens
+        # (the same shapes an evicted-then-rechunked resume reaches)
+        long_p = np.asarray(req(0, LONG_LEN).prompt)
+        extra = np.random.default_rng(5_999).integers(
+            0, cfg.vocab_size, NEW_TOKENS)
+        engine.serve([req(0, LONG_LEN)], honor_arrivals=False)
+        engine.serve(
+            [Request(rid=10 ** 6 + 10 + k,
+                     prompt=np.concatenate([long_p, extra[:k]]),
+                     max_new_tokens=NEW_TOKENS)
+             for k in range(1, NEW_TOKENS, 2)],
+            honor_arrivals=False)
+
+
+def _measure_t_long(engine, cfg) -> float:
+    """Warm monolithic long-prompt TTFT (seconds): the calibration
+    unit every SLO and grid rate is expressed in."""
+    from repro.serving import Request
+
+    ts = []
+    for j in range(3):
+        rng = np.random.default_rng(6_000 + j)
+        r = Request(rid=10 ** 6 + 100 + j,
+                    prompt=rng.integers(0, cfg.vocab_size, LONG_LEN),
+                    max_new_tokens=1)
+        t0 = time.perf_counter()
+        engine.serve([r], honor_arrivals=False)
+        ts.append(time.perf_counter() - t0)
+    return float(min(ts))
+
+
+def _short_attainment(completed, ttft_slo_s: float) -> float:
+    """Fraction of *short-class* requests whose TTFT met the SLO —
+    the interactive-latency constraint capacity is maximised under
+    (long prompts necessarily exceed a sub-prefill TTFT bound)."""
+    ttfts = [r.first_token_s - r.arrival_s for r in completed
+             if len(r.prompt) < LONG_LEN]
+    if not ttfts:
+        return float("nan")
+    return float(np.mean([t <= ttft_slo_s for t in ttfts]))
+
+
+def _run_grid(sut, grid_qps, ttft_slo_s, tpot_slo_s, n_queries):
+    """One PowerRun per offered rate, ascending; returns
+    ``[(qps, short_attainment, SubmissionResult, sched_stats)]``."""
+    from repro.harness import PowerRun, Server
+
+    points = []
+    for qps in grid_qps:
+        scenario = Server(target_qps=qps, latency_slo_s=30.0,
+                          min_duration_s=0.0, min_queries=n_queries,
+                          mode="queue", seed=SEED,
+                          ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s)
+        res = PowerRun(sut, scenario, seed=0, sample_hz=1000.0).run()
+        attain = _short_attainment(sut.completed, ttft_slo_s)
+        eng = sut.engine
+        stats = dict(getattr(eng, "sched_stats", None)
+                     or getattr(getattr(eng, "engine", None),
+                                "sched_stats", None) or {})
+        points.append((qps, attain, res, stats))
+    return points
+
+
+def _point_metrics(points, grid_qps, floor_qps):
+    """Grid -> the group's leaves: fixed-load throughput/efficiency at
+    the MID point, sustainable QPS, and capacity per watt at the
+    highest sustaining point."""
+    from repro.core.efficiency import (max_sustainable_qps,
+                                       qps_at_slo_per_joule)
+
+    msq = max_sustainable_qps([(q, a) for q, a, _, _ in points],
+                              min_attainment=ATTAIN_BAR)
+    # nothing sustained: floor at half the lowest grid rate so the
+    # gated speedup ratios stay finite (reads as "below the grid")
+    msq_eff = msq if msq > 0 else floor_qps
+    at = next((p for p in reversed(points) if p[0] <= msq_eff), points[0])
+    mid = points[min(MID, len(points) - 1)]
+    m = mid[2].outcome.server
+    out = {
+        "tokens_per_s": m.tokens_per_s,
+        "tok_per_j": m.total_tokens / max(mid[2].summary.energy_j,
+                                          1e-12),
+        "qps_at_slo": msq,
+        "qps_at_slo_per_j": qps_at_slo_per_joule(
+            msq_eff, at[2].summary.avg_watts),
+    }
+    for (q, a, _, _), x in zip(points, grid_qps):
+        out[f"attain_x{int(round(x * 10))}"] = a
+    return out, msq_eff
+
+
+def _points(smoke: bool) -> dict:
+    import jax
+
+    from repro.configs import get_config, reduce_config
+    from repro.core.loadgen import qid_of
+    from repro.harness import (ContinuousBatchingSUT, DisaggregatedSUT)
+    from repro.models import build_model
+    from repro.models.param import init_params
+    from repro.serving import (ContinuousBatchingEngine,
+                               DisaggregatedEngine, PrefillWorker,
+                               Scheduler)
+
+    cfg = reduce_config(get_config("qwen3-1.7b"))
+    model = build_model(cfg)
+    params = init_params(model.param_defs(), jax.random.PRNGKey(0))
+    n = 24 if smoke else 48
+    grid_x = GRID_X if smoke else GRID_X_FULL
+
+    def engine(**kw):
+        return ContinuousBatchingEngine(
+            model, params, max_len=MAX_LEN, n_slots=SLOTS,
+            chunk_steps=CHUNK_STEPS, kv_page_size=PAGE_SIZE,
+            kv_pages=KV_PAGES, **kw)
+
+    # calibration: a dedicated monolithic engine measures t_long warm
+    cal = engine()
+    _warm(cal, cfg, chunked=False, prefix=False)
+    t_long = _measure_t_long(cal, cfg)
+    ttft_slo = SLO_FRAC * t_long
+    tpot_slo = TPOT_FRAC * t_long
+    grid_qps = [x / t_long for x in grid_x]
+    floor_qps = grid_qps[0] / 2.0
+
+    configs = {
+        "monolithic": (engine(), False, False),
+        "chunked": (engine(prefill_chunk_tokens=PREFILL_CHUNK),
+                    True, False),
+        "chunked_preempt": (engine(prefill_chunk_tokens=PREFILL_CHUNK,
+                                   prefix_caching=True,
+                                   scheduler=Scheduler(preemption=True)),
+                            True, True),
+    }
+
+    points_out: dict = {"calibration": {
+        "t_long_ms": t_long * 1e3, "ttft_slo_ms": ttft_slo * 1e3,
+        "grid_qps": [round(q, 3) for q in grid_qps]}}
+    msq_by_name: dict = {}
+    for name, (eng, chunked, prefix) in configs.items():
+        _warm(eng, cfg, chunked=chunked, prefix=prefix)
+
+        def make_request(i, s, a, _slo=ttft_slo):
+            return _make_request(cfg, qid_of(s, i), i, a, _slo)
+
+        sut = ContinuousBatchingSUT(eng, cfg, name=f"slo-{name}",
+                                    make_request=make_request)
+        pts = _run_grid(sut, grid_qps, ttft_slo, tpot_slo, n)
+        out, msq_eff = _point_metrics(pts, grid_x, floor_qps)
+        msq_by_name[name] = msq_eff
+        if name == "chunked_preempt":
+            out["preemptions"] = sum(s.get("preemptions", 0)
+                                     for _, _, _, s in pts)
+            out["resumes"] = sum(s.get("resumes", 0)
+                                 for _, _, _, s in pts)
+        if chunked:
+            dc = sum(s.get("decode_chunks", 0) for _, _, _, s in pts)
+            il = sum(s.get("interleaved_chunks", 0)
+                     for _, _, _, s in pts)
+            out["interleave_ratio"] = il / max(1, dc)
+        points_out[name] = out
+
+    # disaggregated: prefill fleet -> paged handoff -> decode fleet,
+    # separate meter stacks per fleet (measured energy split)
+    dec = engine()
+    workers = [PrefillWorker(dec.model, dec.params, page_size=PAGE_SIZE)
+               for _ in range(N_PREFILL_WORKERS)]
+    deng = DisaggregatedEngine(workers, dec)
+    _warm(deng, cfg, chunked=False, prefix=False)
+
+    def make_request_d(i, s, a, _slo=ttft_slo):
+        return _make_request(cfg, qid_of(s, i), i, a, _slo)
+
+    dsut = DisaggregatedSUT(deng, cfg, name="slo-disaggregated",
+                            make_request=make_request_d)
+    pts = _run_grid(dsut, grid_qps, ttft_slo, tpot_slo, n)
+    out, msq_eff = _point_metrics(pts, grid_x, floor_qps)
+    msq_by_name["disaggregated"] = msq_eff
+    dom = pts[min(MID, len(pts) - 1)][2].per_domain_energy_j
+    out["prefill_j"] = dom.get("prefill/wall", 0.0)
+    out["decode_j"] = dom.get("decode/wall", 0.0)
+    total = out["prefill_j"] + out["decode_j"]
+    out["prefill_energy_frac"] = out["prefill_j"] / max(total, 1e-12)
+    points_out["disaggregated"] = out
+
+    # the acceptance bar, gated: preemptive chunked serving sustains
+    # strictly more SLO-compliant QPS than monolithic admission
+    points_out["chunked_preempt"]["speedup"] = (
+        msq_by_name["chunked_preempt"] / msq_by_name["monolithic"])
+    return points_out
+
+
+def metrics(smoke: bool = False) -> dict:
+    """QPS-at-SLO sweep keyed for trend artifacts and the perf gate."""
+    return _points(smoke)
+
+
+def csv(smoke: bool = False) -> list[str]:
+    points = _points(smoke)
+    rows = []
+    cal = points.pop("calibration")
+    rows.append(f"slo_calibration,{cal['t_long_ms']:.1f},"
+                f"slo={cal['ttft_slo_ms']:.1f}ms;"
+                f"grid={'/'.join(str(q) for q in cal['grid_qps'])}qps")
+    for name, p in points.items():
+        derived = (f"{p['tokens_per_s']:.1f}toks/s;"
+                   f"{p['tok_per_j']:.3f}tok/J;"
+                   f"msq={p['qps_at_slo']:.2f}qps;"
+                   f"{p['qps_at_slo_per_j']:.4f}qps_at_slo/J")
+        if "speedup" in p:
+            derived += f";speedup={p['speedup']:.2f}x"
+        if "preemptions" in p:
+            derived += (f";preempt={p['preemptions']}"
+                        f";resume={p['resumes']}")
+        if "prefill_j" in p:
+            derived += (f";prefill={p['prefill_j']:.2f}J"
+                        f";decode={p['decode_j']:.2f}J"
+                        f";prefill_frac={p['prefill_energy_frac']:.2f}")
+        attains = ";".join(
+            f"{k[7:]}={v:.2f}" for k, v in sorted(p.items())
+            if k.startswith("attain_"))
+        rows.append(f"slo_{name},{p['qps_at_slo']:.2f},"
+                    f"{derived};{attains}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    for row in csv(smoke=args.smoke):
+        print(row)

@@ -1,0 +1,173 @@
+#!/usr/bin/env python
+"""CI docs gate: the public surface stays documented, the docs stay
+linked.
+
+Two checks, both cheap enough for tier-1:
+
+- **Docstrings** — every public symbol of the documented packages
+  (``repro.harness``, ``repro.serving``: each module, every public
+  class/function defined in the package, every public method and
+  property those classes define) must carry a docstring.  Inherited
+  members and underscore-prefixed names are exempt, and an override
+  of a base-class method that is itself documented inherits those
+  docs (the ``inspect.getdoc`` convention) — only symbols with *no*
+  docs anywhere in the MRO fail.
+- **Links** — every relative markdown link in ``README.md`` and
+  ``docs/*.md`` must resolve to an existing file, and a ``#fragment``
+  pointing into a markdown file must match one of its headings
+  (GitHub-style slugs).  External (``http``/``mailto``) links are not
+  fetched.
+
+Usage::
+
+  PYTHONPATH=src python scripts/check_docs.py
+
+Exit status: 0 = documented and linked, 1 = violations (each printed
+as ``path:symbol`` or ``file: broken link``).
+"""
+from __future__ import annotations
+
+import importlib
+import inspect
+import os
+import pkgutil
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for path in (ROOT, os.path.join(ROOT, "src")):
+    if path not in sys.path:
+        sys.path.insert(0, path)
+
+PACKAGES = ("repro.harness", "repro.serving")
+DOC_FILES = ("README.md",) + tuple(
+    os.path.join("docs", f)
+    for f in sorted(os.listdir(os.path.join(ROOT, "docs")))
+    if f.endswith(".md")) if os.path.isdir(os.path.join(ROOT, "docs")) \
+    else ("README.md",)
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _modules(pkg_name: str):
+    pkg = importlib.import_module(pkg_name)
+    yield pkg
+    for info in pkgutil.iter_modules(pkg.__path__,
+                                     prefix=pkg_name + "."):
+        yield importlib.import_module(info.name)
+
+
+def _class_members(cls):
+    """Public methods/properties *defined on* ``cls`` (not inherited)."""
+    for name, member in vars(cls).items():
+        if name.startswith("_"):
+            continue
+        if isinstance(member, property):
+            yield name, member.fget
+        elif isinstance(member, (staticmethod, classmethod)):
+            yield name, member.__func__
+        elif inspect.isfunction(member):
+            yield name, member
+
+
+def _inherited_doc(cls, mname: str) -> bool:
+    """True when a base class documents ``mname`` (override inherits)."""
+    for base in cls.__mro__[1:]:
+        member = vars(base).get(mname)
+        if member is None:
+            continue
+        fn = member.fget if isinstance(member, property) else member
+        if (getattr(fn, "__doc__", None) or "").strip():
+            return True
+    return False
+
+
+def check_docstrings() -> list[str]:
+    missing: list[str] = []
+    for pkg_name in PACKAGES:
+        for mod in _modules(pkg_name):
+            if not (mod.__doc__ or "").strip():
+                missing.append(f"{mod.__name__}: missing module "
+                               f"docstring")
+            for name, obj in vars(mod).items():
+                if name.startswith("_"):
+                    continue
+                if not (inspect.isclass(obj)
+                        or inspect.isfunction(obj)):
+                    continue
+                if not getattr(obj, "__module__",
+                               "").startswith(pkg_name):
+                    continue     # re-export from another package
+                if obj.__module__ != mod.__name__:
+                    continue     # reported where it is defined
+                if not (inspect.getdoc(obj) or "").strip():
+                    missing.append(f"{mod.__name__}.{name}: missing "
+                                   f"docstring")
+                if inspect.isclass(obj):
+                    for mname, fn in _class_members(obj):
+                        if (fn.__doc__ or "").strip():
+                            continue
+                        if _inherited_doc(obj, mname):
+                            continue
+                        missing.append(
+                            f"{mod.__name__}.{name}.{mname}: "
+                            f"missing docstring")
+    return missing
+
+
+def _slugs(md_text: str) -> set[str]:
+    """GitHub-style anchor slugs for every heading in ``md_text``."""
+    out = set()
+    for heading in _HEADING.findall(md_text):
+        # strip inline code/emphasis markers, then slugify
+        text = re.sub(r"[`*_]", "", heading).strip().lower()
+        slug = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+        out.add(slug.replace(" ", "-"))
+    return out
+
+
+def check_links() -> list[str]:
+    broken: list[str] = []
+    for rel in DOC_FILES:
+        doc_path = os.path.join(ROOT, rel)
+        if not os.path.exists(doc_path):
+            continue
+        with open(doc_path) as f:
+            text = f.read()
+        base = os.path.dirname(doc_path)
+        for target in _LINK.findall(text):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):
+                continue                       # http:, mailto:, …
+            path_part, _, frag = target.partition("#")
+            if path_part:
+                dest = os.path.normpath(os.path.join(base, path_part))
+                if not os.path.exists(dest):
+                    broken.append(f"{rel}: broken link -> {target}")
+                    continue
+            else:
+                dest = doc_path                # same-file anchor
+            if frag and dest.endswith(".md"):
+                with open(dest) as f:
+                    if frag not in _slugs(f.read()):
+                        broken.append(f"{rel}: dead anchor -> "
+                                      f"{target}")
+    return broken
+
+
+def main() -> int:
+    problems = check_docstrings() + check_links()
+    for p in problems:
+        print(f"[check-docs] {p}")
+    if problems:
+        print(f"check-docs: {len(problems)} problem(s)")
+        return 1
+    n_files = len([f for f in DOC_FILES
+                   if os.path.exists(os.path.join(ROOT, f))])
+    print(f"check-docs: OK ({len(PACKAGES)} packages documented, "
+          f"{n_files} doc files link-checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: full test suite + benchmark smoke + harness smoke +
-# sharded (virtual-mesh) smoke.  Mirrors ROADMAP.md's "Tier-1 verify"
-# command; run from the repo root.  Each stage prints wall-time banners
-# so a gate failure localizes to a stage in the CI log.
+# Tier-1 CI gate: static analysis + full test suite + benchmark smoke
+# + harness smoke + sharded (virtual-mesh) smoke + chaos smoke +
+# paged-serving parity + SLO smoke + docs check.  Mirrors ROADMAP.md's
+# "Tier-1 verify" command; run from the repo root.  Each stage prints
+# wall-time banners so a gate failure localizes to a stage in the log.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -47,6 +48,20 @@ stage chaos-smoke python -m benchmarks.resilience --smoke
 
 # 6. paged serving smoke: paged KV + radix prefix cache must be
 #    token-identical to the contiguous engine (TP=1 in-order +
-#    shuffled pool, prefix hits, speculative rollback, TP=4 on the
-#    virtual mesh — the script forces its own 4-device host mesh)
+#    shuffled pool, prefix hits, speculative rollback, chunked
+#    prefill, preempt/park/resume, TP=4 on the virtual mesh — the
+#    script forces its own 4-device host mesh)
 stage paged-serving python scripts/paged_smoke.py
+
+# 7. SLO smoke: the Server-capacity sweep on a 4-device virtual host —
+#    chunked + preemptive serving must sustain strictly higher QPS at
+#    the TTFT SLO than monolithic admission, and the disaggregated
+#    config must report a measured prefill/decode joule split
+stage slo-smoke env \
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m benchmarks.slo_sweep --smoke
+
+# 8. docs check: every public name in repro.harness / repro.serving
+#    carries a docstring (MRO-aware), and every markdown link in
+#    README.md + docs/ resolves (paths and #fragments)
+stage check-docs python scripts/check_docs.py

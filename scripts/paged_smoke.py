@@ -13,8 +13,13 @@ forced host devices (no hardware):
 - prefix-cache hits (shared prompt prefix): identical output to a
   cold prefill, with cached/prefill token accounting;
 - speculative + paged parity (verify rollback across page boundaries);
+- chunked prefill (SLO-aware interleaved admission) parity at TP=1;
+- preempt/park/resume parity at TP=1: a high-priority arrival under
+  page-pool pressure parks a best-effort request, which resumes via
+  the prefix-cache extend path with zero token drift;
 - TP=4 sharded paged parity, including hits through the sharded
-  extend path.
+  extend path, plus the chunked and preempt/resume checks again
+  through the shard-mapped kernels.
 
 Runs in ~a minute on CPU; the tier-1 ``paged-serving`` stage and the
 dedicated CI job both call it.  Exit 0 = all parities hold.
@@ -64,6 +69,54 @@ def _outputs(engine, requests):
     return {r.rid: r.output for r in done}, done
 
 
+def _preempt_requests():
+    import numpy as np
+
+    from repro.serving import Request
+
+    # two best-effort 12-token prompts fill the 8 usable pages of the
+    # contended pool exactly (12 prompt + 4 new = 4 pages each); the
+    # high-priority short that lands mid-decode must park one to admit
+    return [Request(rid=0, prompt=np.arange(12) + 7, max_new_tokens=4,
+                    arrival_s=0.0, priority=0),
+            Request(rid=1, prompt=np.arange(12) + 40, max_new_tokens=4,
+                    arrival_s=0.0, priority=0),
+            Request(rid=2, prompt=np.arange(4) + 90, max_new_tokens=4,
+                    arrival_s=0.01, priority=1, deadline_s=0.05)]
+
+
+def _preempt_parity(tag, engine, ref_out):
+    import copy
+
+    import numpy as np
+
+    from repro.serving import Request
+
+    engine.serve([Request(rid=80, prompt=np.arange(12) + 300,
+                          max_new_tokens=2),
+                  Request(rid=81, prompt=np.arange(4) + 400,
+                          max_new_tokens=2)],
+                 honor_arrivals=False)     # compile off the clock
+    t = [0.0]
+
+    def now():
+        t[0] += 0.002        # every clock read ticks: the priority
+        return t[0]          # arrival lands while both slots decode
+
+    def sleep(dt):
+        t[0] += max(0.0, dt)
+
+    done = engine.serve(copy.deepcopy(_preempt_requests()),
+                        now=now, sleep=sleep)
+    stats = engine.sched_stats
+    assert stats["preemptions"] >= 1, (tag, stats)
+    assert stats["resumes"] >= 1, (tag, stats)
+    assert {r.rid: r.output for r in done} == ref_out, \
+        f"{tag} preempt/resume output diverged"
+    print(f"[paged-smoke] {tag} preempt/resume parity OK "
+          f"(preemptions={stats['preemptions']})")
+
+
 def main() -> int:
     import numpy as np
     from jax import random
@@ -99,6 +152,19 @@ def main() -> int:
     assert out == ref_mixed, "shuffled-pool paged output diverged"
     print("[paged-smoke] TP=1 paged parity OK (shuffled pool order)")
 
+    # chunked prefill: 20-token prompts walk 8-token chunks (2 full +
+    # a 4-token tail) interleaved with decode — tokens must not move
+    long_reqs = _mixed_requests([4, 6, 5], prompt_len=20)
+    ref_long, _ = _outputs(ref, long_reqs)
+    ck = ContinuousBatchingEngine(model, params, max_len=64, n_slots=3,
+                                  chunk_steps=4, kv_page_size=8,
+                                  prefill_chunk_tokens=8)
+    out, _ = _outputs(ck, long_reqs)
+    assert out == ref_long, "TP=1 chunked-prefill output diverged"
+    assert ck.sched_stats["prefill_chunks"] >= 9, ck.sched_stats
+    print("[paged-smoke] TP=1 chunked-prefill parity OK "
+          f"(chunks={ck.sched_stats['prefill_chunks']})")
+
     # prefix hits: shared 16-token prefix, unique 2-token suffixes
     pc = ContinuousBatchingEngine(model, params, max_len=64, n_slots=2,
                                   chunk_steps=4, kv_page_size=8,
@@ -125,6 +191,17 @@ def main() -> int:
     assert out == ref_spec, "speculative paged output diverged"
     print("[paged-smoke] speculative paged parity OK")
 
+    # preempt/park/resume on a contended pool vs an uncontended run
+    from repro.serving import Scheduler
+
+    pre_kw = dict(max_len=16, n_slots=3, chunk_steps=2, kv_page_size=4)
+    pre_ref = ContinuousBatchingEngine(model, params, kv_pages=33,
+                                       **pre_kw)
+    ref_pre, _ = _outputs(pre_ref, _preempt_requests())
+    _preempt_parity("TP=1", ContinuousBatchingEngine(
+        model, params, kv_pages=9, prefix_caching=True,
+        scheduler=Scheduler(preemption=True), **pre_kw), ref_pre)
+
     # TP=4 on the virtual mesh, including hits through the sharded
     # extend path
     sh = ShardedContinuousBatchingEngine(model, params, tp=4,
@@ -137,6 +214,21 @@ def main() -> int:
     assert out == ref_shared, "TP=4 prefix-hit output diverged"
     assert sh.prefix_stats["hits"] >= 3, sh.prefix_stats
     print(f"[paged-smoke] TP=4 paged parity OK ({sh.prefix_stats})")
+
+    # TP=4 chunked prefill through the shard-mapped kernels
+    sh_ck = ShardedContinuousBatchingEngine(model, params, tp=4,
+                                            max_len=64, n_slots=3,
+                                            chunk_steps=4,
+                                            kv_page_size=8,
+                                            prefill_chunk_tokens=8)
+    out, _ = _outputs(sh_ck, long_reqs)
+    assert out == ref_long, "TP=4 chunked-prefill output diverged"
+    print("[paged-smoke] TP=4 chunked-prefill parity OK")
+
+    # TP=4 preempt/park/resume through the sharded extend path
+    _preempt_parity("TP=4", ShardedContinuousBatchingEngine(
+        model, params, tp=4, kv_pages=9, prefix_caching=True,
+        scheduler=Scheduler(preemption=True), **pre_kw), ref_pre)
 
     print("[paged-smoke] all parities hold")
     return 0

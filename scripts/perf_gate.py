@@ -59,12 +59,25 @@ CALIBRATIONS = {
     # hit-rate-0 point = the paged engine with the prefix cache never
     # hitting: the group's all-miss execution profile
     "prefix_cache": "prefix_cache.hit0.tokens_per_s",
+    # monolithic admission at the shared mid grid rate: the SLO
+    # sweep's plain continuous-batching execution profile (every knob
+    # in the sweep is calibrated to measured prefill time, so rates
+    # track this member tightly)
+    "qps_at_slo_per_j": "qps_at_slo_per_j.monolithic.tokens_per_s",
 }
 # the virtual-mesh scale points (TP over forced host devices, threaded
 # replica fleets) carry inherently higher run-to-run noise than the
 # 1-device serving workloads even after interleaved best-of + tp1
 # normalization; their gate tolerance floor reflects that
-GROUP_TOL_FLOOR = {"scale": 0.30}
+GROUP_TOL_FLOOR = {"scale": 0.30,
+                   # the SLO sweep serves real-time Poisson arrivals;
+                   # its gated ratios are quantized by the QPS grid
+                   # and attainment bar, so small drifts step — the
+                   # floor absorbs one request flipping at a grid
+                   # point while a real collapse (preemptive serving
+                   # losing its 2.5x sustainable-QPS edge to 1.0x)
+                   # still fails hard
+                   "qps_at_slo_per_j": 0.25}
 # only rate-like leaves are gated; counters/shares are informational.
 # meter_samples_per_s guards the multi-channel metering path itself
 # (channel-samples produced per second of metering wall time): extra
@@ -104,13 +117,14 @@ def flatten(tree: dict, prefix: str = "") -> dict:
 def collect(smoke: bool = True) -> dict:
     """Run the gated benchmarks and return their nested metrics."""
     from benchmarks import (prefix_cache, resilience, scale_sweep,
-                            serving_throughput)
+                            serving_throughput, slo_sweep)
 
     return {
         "serving": serving_throughput.metrics(smoke=smoke),
         "scale": scale_sweep.metrics(smoke=smoke),
         "resilience": resilience.metrics(smoke=smoke),
         "prefix_cache": prefix_cache.metrics(smoke=smoke),
+        "qps_at_slo_per_j": slo_sweep.metrics(smoke=smoke),
     }
 
 

@@ -292,6 +292,11 @@ class ServerMetrics:
     n_admitted: int = 0
     n_shed: int = 0
     n_timeout: int = 0
+    # per-token tail SLOs (None = not constrained this run): a query
+    # meets the tail when its TTFT and its own decode cadence both do
+    ttft_slo_s: Optional[float] = None
+    tpot_slo_s: Optional[float] = None
+    n_tail_miss: int = 0             # completed but blew a tail SLO
 
     def ttft_p(self, p: float) -> float:
         return nan_percentile(self.ttft_s, p)
@@ -316,6 +321,19 @@ class ServerMetrics:
             return float("nan")
         return self.result.n_queries / offered
 
+    @property
+    def tail_attainment(self) -> float:
+        """Fraction of offered queries that met *both* per-token tail
+        SLOs (TTFT and TPOT), shed and timed-out queries counting
+        against — the Server metric the SLO sweep maximises QPS over.
+        ``nan`` when the run set no tail SLO."""
+        if self.ttft_slo_s is None and self.tpot_slo_s is None:
+            return float("nan")
+        offered = self.result.n_queries + self.n_shed + self.n_timeout
+        if offered == 0:
+            return float("nan")
+        return (self.result.n_queries - self.n_tail_miss) / offered
+
 
 def qid_of(sample, fallback: int) -> int:
     """The loadgen-assigned unique query id of a sample, else the
@@ -335,7 +353,9 @@ def run_server_queue(serve: Callable[[list[tuple[dict, float]]], list],
                      min_queries: int = 32,
                      deadline_s: Optional[float] = None,
                      shed: Optional[ShedPolicy] = None,
-                     fault_plan=None) -> ServerMetrics:
+                     fault_plan=None,
+                     ttft_slo_s: Optional[float] = None,
+                     tpot_slo_s: Optional[float] = None) -> ServerMetrics:
     """Server scenario against an asynchronous admission queue.
 
     The whole Poisson arrival schedule is generated up front and handed
@@ -363,6 +383,14 @@ def run_server_queue(serve: Callable[[list[tuple[dict, float]]], list],
     - ``deadline_s``: per-request deadline.  Queries completing past it
       count as ``n_timeout`` and are excluded from the latency/token
       stats (goodput semantics).
+
+    Tail SLOs (``ttft_slo_s`` / ``tpot_slo_s``, seconds, default
+    unconstrained): per-query time-to-first-token and per-token decode
+    cadence bounds.  Completed queries that blow either count in
+    ``n_tail_miss`` (they stay in the latency stats — they *did*
+    complete) and ``ServerMetrics.tail_attainment`` reports the
+    fraction of offered queries meeting both; when set, ``slo_met``
+    additionally requires p99 TTFT/TPOT within the bounds.
 
     Query-id conservation is enforced whenever the completed records
     carry rids (the ``repro.serving.Request`` contract): every
@@ -424,16 +452,34 @@ def run_server_queue(serve: Callable[[list[tuple[dict, float]]], list],
     tpot = np.asarray([(r.done_s - r.first_token_s)
                        / max(1, len(r.output) - 1)
                        for r in done if len(r.output or []) > 1])
+    n_tail_miss = 0
+    if ttft_slo_s is not None or tpot_slo_s is not None:
+        for r in done:
+            miss = (ttft_slo_s is not None
+                    and r.first_token_s - r.arrival_s > ttft_slo_s)
+            if not miss and tpot_slo_s is not None \
+                    and len(r.output or []) > 1:
+                cadence = ((r.done_s - r.first_token_s)
+                           / (len(r.output) - 1))
+                miss = cadence > tpot_slo_s
+            n_tail_miss += bool(miss)
     dur = max((r.done_s for r in recs), default=0.0)
     res = LoadgenResult("Server", len(done), dur, lat,
                         qps=len(done) / dur if dur else 0.0,
                         min_duration_met=dur >= min_duration_s)
     total_tokens = sum(len(r.output or []) for r in done)
-    return ServerMetrics(res, res.p99 <= latency_slo_s, ttft, tpot,
+    slo = res.p99 <= latency_slo_s
+    if ttft_slo_s is not None:
+        slo = slo and nan_percentile(ttft, 99) <= ttft_slo_s
+    if tpot_slo_s is not None and tpot.size:
+        slo = slo and nan_percentile(tpot, 99) <= tpot_slo_s
+    return ServerMetrics(res, bool(slo), ttft, tpot,
                          total_tokens,
                          total_tokens / dur if dur else 0.0,
                          n_admitted=len(admitted), n_shed=n_shed,
-                         n_timeout=n_timeout)
+                         n_timeout=n_timeout,
+                         ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s,
+                         n_tail_miss=n_tail_miss)
 
 
 def loops_for_min_duration(workload_s: float,

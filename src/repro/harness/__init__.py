@@ -31,9 +31,9 @@ that only provides ``power_source`` is wrapped into a single-domain
 wall-only stack with a ``DeprecationWarning``.
 """
 from repro.harness.sut import (  # noqa: F401
-    SUT, BaseSUT, CallableSUT, ContinuousBatchingSUT, ReplicatedSUT,
-    ServeEngineSUT, ShardedSUT, TinySUT, constant_power, rail_domains,
-    throughput_watts, throughput_work,
+    SUT, BaseSUT, CallableSUT, ContinuousBatchingSUT, DisaggregatedSUT,
+    ReplicatedSUT, ServeEngineSUT, ShardedSUT, TinySUT, constant_power,
+    rail_domains, throughput_watts, throughput_work,
 )
 from repro.harness.scenarios import (  # noqa: F401
     SCENARIOS, MultiStream, Offline, Scenario, ScenarioOutcome, Server,

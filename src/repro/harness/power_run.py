@@ -53,6 +53,8 @@ TINY_ANALYZER = AnalyzerSpec(
 
 
 def analyzer_for_scale(scale: str, seed: int = 0) -> VirtualAnalyzer:
+    """Instrument matched to the scale class: the µW-range I/O-manager
+    spec for ``tiny`` SUTs, the default WT310-class analyzer else."""
     if scale == "tiny":
         return VirtualAnalyzer(TINY_ANALYZER, seed=seed)
     return VirtualAnalyzer(seed=seed)
@@ -80,10 +82,13 @@ class SubmissionResult:
 
     @property
     def passed(self) -> bool:
+        """True when the compliance review ACCEPTED the run."""
         return self.report.passed
 
     @property
     def samples_per_joule(self) -> float:
+        """The headline efficiency number (measured if available,
+        else the submission record's)."""
         if self.summary.samples_per_joule is not None:
             return self.summary.samples_per_joule
         return self.submission.samples_per_joule
@@ -114,6 +119,8 @@ class SubmissionResult:
                               boundary_only=False)
 
     def render(self) -> str:
+        """Human-readable digest: metrics, Joules, per-domain split,
+        and the compliance report."""
         o, s = self.outcome, self.summary
         lines = [
             f"{o.scenario}[{self.submission.workload}]: "

@@ -58,6 +58,9 @@ class Scenario:
 
     def run(self, sut, qsl: QuerySampleLibrary,
             clock: Optional[Clock] = None) -> ScenarioOutcome:
+        """Drive ``sut`` with this scenario's load pattern and return
+        the measured ``ScenarioOutcome`` (each subclass maps onto one
+        ``repro.core.loadgen`` runner)."""
         raise NotImplementedError
 
 
@@ -120,7 +123,11 @@ class Server(Scenario):
     ``run_server_queue``: ``deadline_s`` per-request deadlines,
     ``shed`` (a ``repro.core.loadgen.ShedPolicy``) admission-control
     load shedding, and ``fault_plan`` (``repro.faults.FaultPlan``)
-    queue-overload burst splicing.
+    queue-overload burst splicing.  ``ttft_slo_s``/``tpot_slo_s``
+    (seconds, queue mode only) add per-token tail SLOs: ``slo_met``
+    then also requires p99 TTFT/TPOT within bounds, and
+    ``ServerMetrics.tail_attainment`` reports the per-query fraction
+    meeting both — the constraint the SLO sweep maximises QPS under.
     """
 
     target_qps: float = 4.0
@@ -131,6 +138,8 @@ class Server(Scenario):
     deadline_s: Optional[float] = None
     shed: Optional[object] = None    # loadgen.ShedPolicy
     fault_plan: Optional[object] = None   # faults.FaultPlan
+    ttft_slo_s: Optional[float] = None
+    tpot_slo_s: Optional[float] = None
     name = "Server"
 
     def _use_queue(self, sut) -> bool:
@@ -154,7 +163,9 @@ class Server(Scenario):
                                  min_queries=self.min_queries,
                                  deadline_s=self.deadline_s,
                                  shed=self.shed,
-                                 fault_plan=self.fault_plan)
+                                 fault_plan=self.fault_plan,
+                                 ttft_slo_s=self.ttft_slo_s,
+                                 tpot_slo_s=self.tpot_slo_s)
             return ScenarioOutcome("Server", m.result,
                                    m.result.n_queries,
                                    slo_met=m.slo_met, server=m)

@@ -61,8 +61,8 @@ from repro.harness import (ContinuousBatchingSUT, MultiStream, Offline,
                            Server, ShardedSUT, SingleStream)
 from repro.models import build_model
 from repro.models.param import init_params
-from repro.serving import (ContinuousBatchingEngine, Request, ServeEngine,
-                           ShardedContinuousBatchingEngine,
+from repro.serving import (ContinuousBatchingEngine, Request, Scheduler,
+                           ServeEngine, ShardedContinuousBatchingEngine,
                            truncate_draft)
 
 
@@ -117,6 +117,10 @@ def _build_continuous_engine(args, model, params, spec_kw):
     if args.kv_page_size:
         paged_kw = dict(kv_page_size=args.kv_page_size,
                         prefix_caching=args.prefix_cache)
+    if args.prefill_chunk:
+        paged_kw["prefill_chunk_tokens"] = args.prefill_chunk
+    if args.preemption:
+        paged_kw["scheduler"] = Scheduler(preemption=True)
     if args.tp > 1:
         return ShardedContinuousBatchingEngine(
             model, params, tp=args.tp, max_len=args.max_len,
@@ -188,7 +192,9 @@ def _serve_continuous(args, cfg, model, params):
               f"(draft {draft_cfg.name}): acceptance {acc:.2f}, "
               f"{sum(e.spec_stats['rounds'] for e in engines)} verified "
               f"slot-rounds")
-    if args.prefix_cache:
+    # guard on engine state, not the CLI flag: only engines actually
+    # running the radix cache have meaningful prefix stats
+    if any(getattr(e, "prefix_caching", False) for e in engines):
         lookups = sum(e.prefix_stats["lookups"] for e in engines)
         hits = sum(e.prefix_stats["hits"] for e in engines)
         cached = sum(e.prefix_stats["cached_tokens"] for e in engines)
@@ -198,6 +204,15 @@ def _serve_continuous(args, cfg, model, params):
               f"tokens served from cache, {evicted} pages evicted, "
               f"peak {peak} pages "
               f"(page size {args.kv_page_size})")
+    sched = [getattr(e, "sched_stats", None) or {} for e in engines]
+    if any(v for s in sched for v in s.values()):
+        pre = sum(s.get("preemptions", 0) for s in sched)
+        res = sum(s.get("resumes", 0) for s in sched)
+        chunks = sum(s.get("prefill_chunks", 0) for s in sched)
+        inter = sum(s.get("interleaved_chunks", 0) for s in sched)
+        print(f"  scheduler: {pre} preemptions, {res} resumes, "
+              f"{chunks} prefill chunks "
+              f"({inter / max(1, chunks):.0%} interleaved with decode)")
     e = np.asarray(list((r.per_request_energy_j or {}).values()))
     if e.size:
         print(f"  per-request energy: mean {e.mean():.2f} J, "
@@ -254,6 +269,16 @@ def main(argv=None):
                     help="radix prefix caching over the KV pages: "
                          "shared prompt prefixes skip their prefill "
                          "(needs --kv-page-size)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="SLO-aware chunked prefill: tokens per "
+                         "prefill chunk, interleaved with decode "
+                         "(needs --kv-page-size; 0 = whole-prompt "
+                         "prefill at admission)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="priority scheduler with preemption: a "
+                         "high-priority arrival under page-pool "
+                         "pressure parks a best-effort request "
+                         "(needs --prefix-cache)")
     ap.add_argument("--qps", type=float, default=4.0)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=8)
@@ -276,6 +301,13 @@ def main(argv=None):
     if args.prefix_cache and not args.kv_page_size:
         ap.error("--prefix-cache needs --kv-page-size (prefix pages "
                  "are shared at page granularity)")
+    if args.prefill_chunk and not args.kv_page_size:
+        ap.error("--prefill-chunk needs --kv-page-size (chunks write "
+                 "through the paged verify path)")
+    if args.preemption and not args.prefix_cache:
+        ap.error("--preemption needs --prefix-cache (a parked "
+                 "request's KV pages survive as cache entries until "
+                 "resume)")
 
     cfg = get_config(args.arch)
     if args.reduce:

@@ -58,15 +58,32 @@ def _bounded_while(n_steps: int, live, body, init):
 
 @dataclasses.dataclass
 class Request:
+    """One serving request: the contract every engine fills in.
+
+    Caller-set: ``rid`` (unique per serve), ``prompt`` ((S,) int32),
+    ``max_new_tokens``, ``arrival_s`` (seconds on the serve clock),
+    and the SLO-aware fields ``priority`` (higher = more urgent) and
+    ``deadline_s`` (absolute completion deadline on the serve clock;
+    ``None`` = best-effort).  Everything else is engine-stamped.
+    """
+
     rid: int
     prompt: Any                       # (S,) int32
     max_new_tokens: int = 16
     arrival_s: float = 0.0
+    priority: int = 0                 # scheduler class (higher first)
+    deadline_s: Optional[float] = None   # completion deadline, serve
+                                         # clock (None = best effort)
     # filled by the engine:
     first_token_s: Optional[float] = None
     done_s: Optional[float] = None
     output: Optional[list] = None
     energy_j: Optional[float] = None  # filled by attribute_request_energy
+    preemptions: int = 0              # times this request was parked
+                                      # (pages evicted, state host-side)
+    prefill_start_s: Optional[float] = None  # when prefill compute began
+                                      # (disaggregation: on the prefill
+                                      # fleet; None = admitted directly)
     draft_tokens: int = 0             # draft-model forwards this request
                                       # triggered (speculative mode)
     verify_tokens: int = 0            # target-model token-forwards this
@@ -82,6 +99,8 @@ class Request:
                                       # prefix-cache hit)
 
     def ttft_s(self) -> Optional[float]:
+        """Time to first token (arrival to first emission); ``None``
+        until the first token exists."""
         if self.first_token_s is None:
             return None
         return self.first_token_s - self.arrival_s
@@ -92,6 +111,39 @@ class Request:
             return None
         n = max(1, len(self.output or []) - 1)
         return (self.done_s - self.first_token_s) / n
+
+
+@dataclasses.dataclass
+class _PrefillProgress:
+    """Host cursor of one chunked prefill in flight: the slot is held,
+    its pages are pinned, and ``next_pos`` prompt tokens are absorbed
+    so far (the device table row stays garbage until the final chunk
+    installs the slot)."""
+
+    r: Request
+    prompt: Any          # (1, S) device prompt (incl. resumed output)
+    toks: tuple          # host copy of the same tokens
+    row: list            # physical pages, position order
+    row_arr: Any         # (pages_per_slot,) padded device row
+    next_pos: int        # absolute position of the next chunk
+    budget: int          # decode budget at this admission
+    resume: bool         # parked-request resume (stamps differ)
+    cached: int          # prefix-cache tokens skipped at acquire
+
+
+@dataclasses.dataclass
+class _ServeCtx:
+    """Mutable host state of one ``serve`` call, shared by the
+    admission/prefill/decode helpers."""
+
+    slots: list          # per-slot in-flight Request (None = free)
+    slot_left: list      # host shadow of the device `remaining` vector
+    filling: dict        # slot -> _PrefillProgress (chunked prefill)
+    ready: Any           # deque of arrived, unadmitted requests
+    parked: set          # rids of preempted requests awaiting resume
+    done: list           # completed requests
+    now: Callable[[], float]
+    t0: float
 
 
 class ServeEngine:
@@ -147,6 +199,7 @@ class ServeEngine:
         return reqs
 
     def tokens_per_request(self, requests: list[Request]) -> int:
+        """Total emitted tokens (the efficiency denominators' work)."""
         return sum(len(r.output or []) for r in requests)
 
 
@@ -186,7 +239,9 @@ class ContinuousBatchingEngine:
                  draft_model=None, draft_params=None, spec_k: int = 0,
                  temperature: float = 0.0, spec_seed: int = 0,
                  kv_page_size: int = 0, kv_pages: Optional[int] = None,
-                 prefix_caching: bool = False):
+                 prefix_caching: bool = False,
+                 prefill_chunk_tokens: int = 0,
+                 scheduler=None):
         self.model = model
         # the model the jitted bodies trace through: ``model`` here; the
         # tensor-parallel subclass swaps in its per-shard local model
@@ -247,6 +302,22 @@ class ContinuousBatchingEngine:
                 self.prefix_cache = PrefixCache(self.page_pool,
                                                 self.page_size)
         self.prefix_stats = self._zero_prefix_stats()
+        # SLO-aware serving: chunked prefill + pluggable admission
+        self.prefill_chunk_tokens = int(prefill_chunk_tokens)
+        self.chunked_prefill = self.prefill_chunk_tokens > 0
+        if self.chunked_prefill and not self.paged:
+            raise ValueError(
+                "prefill_chunk_tokens > 0 requires kv_page_size > 0 — "
+                "chunked prefill writes each chunk's K/V through the "
+                "paged verify path at absolute positions")
+        self.scheduler = scheduler
+        if (scheduler is not None and scheduler.preemption
+                and not self.prefix_caching):
+            raise ValueError(
+                "Scheduler(preemption=True) requires "
+                "prefix_caching=True — a parked request's KV pages "
+                "survive as prefix-cache entries until resume")
+        self.sched_stats = self._zero_sched_stats()
         self._prefill_slot = jax.jit(self._prefill_slot_impl,
                                      donate_argnums=(2,))
         self._decode_chunk = jax.jit(self._decode_chunk_impl,
@@ -255,6 +326,10 @@ class ContinuousBatchingEngine:
                                    donate_argnums=(2,))
         self._extend_slot = jax.jit(self._extend_slot_impl,
                                     donate_argnums=(2,))
+        self._prefill_chunk = jax.jit(self._prefill_chunk_impl,
+                                      donate_argnums=(1,))
+        self._install_slot = jax.jit(self._install_slot_impl,
+                                     donate_argnums=(0,))
         self.reset()
 
     @staticmethod
@@ -267,6 +342,11 @@ class ContinuousBatchingEngine:
     def _zero_prefix_stats() -> dict:
         return {"lookups": 0, "hits": 0, "cached_tokens": 0,
                 "evicted_pages": 0}
+
+    @staticmethod
+    def _zero_sched_stats() -> dict:
+        return {"preemptions": 0, "resumes": 0, "prefill_chunks": 0,
+                "decode_chunks": 0, "interleaved_chunks": 0}
 
     def acceptance_rate(self) -> float:
         """Fraction of proposed draft tokens the target accepted."""
@@ -287,6 +367,12 @@ class ContinuousBatchingEngine:
             # reference on (the device side only sees the table row)
             self._slot_pages: list[list[int]] = [
                 [] for _ in range(self.n_slots)]
+            # preemption shadows: the token history whose K/V occupies
+            # the slot (admitted prompt, incl. resumed output) and how
+            # many output tokens predate this admission — enough to
+            # reconstruct the parked state host-side
+            self._slot_toks: list[tuple] = [()] * self.n_slots
+            self._slot_base: list[int] = [0] * self.n_slots
         else:
             cache = self.model.init_cache(self.n_slots, self.max_len,
                                           per_slot_pos=True)
@@ -415,6 +501,59 @@ class ContinuousBatchingEngine:
                     done["pos"].astype(jnp.int32)),
             }
         return new, tok0
+
+    def _prefill_chunk_impl(self, params, state, chunk, pages, start):
+        """Absorb one prompt chunk into a slot's pages (chunked prefill).
+
+        ``chunk``: (1, C) prompt slice at absolute positions
+        ``[start, start + C)``; ``pages``: the slot's padded page-table
+        row.  The chunk runs through the batch-1 paged ``verify_step``
+        sharing the engine's pool leaves — K/V land post-RoPE at
+        absolute positions, so after the last chunk the pages hold
+        exactly what one monolithic prefill would have written.  Only
+        the pool leaves change here: the slot's device table row, pos,
+        token and budget are installed by the *final* chunk (an
+        ``_extend_slot`` call), so concurrent decode chunks never see a
+        half-filled slot (their garbage writes for this still-inactive
+        slot land on the reserved garbage page).  The chunk's logits
+        are discarded — no token exists until the prompt completes.
+        """
+        cache = state["cache"]
+        mini = {"layers": cache["layers"],
+                "pos": start[None].astype(jnp.int32),
+                "pages": pages[None]}
+        with sharding_ctx(self.rules):
+            _, mini = self.compute_model.verify_step(params, mini, chunk)
+        return dict(state, cache=dict(cache, layers=mini["layers"]))
+
+    def _install_slot_impl(self, state, blocks, tok0, slot, pages,
+                           row, n_tokens, budget):
+        """Install handed-off K/V blocks into slot ``slot``
+        (prefill/decode disaggregation).
+
+        ``blocks``: per-layer K/V trees of shape (L, NB, page, kvh, dh)
+        computed by a prefill replica; they are scattered at physical
+        ``pages`` (the (NB,) prompt pages) of this engine's pool.
+        ``row`` is the slot's full padded table row, ``n_tokens`` the
+        prompt length, ``tok0`` the first token the prefill replica
+        already emitted.  After this the slot decodes exactly as if it
+        had prefilled locally — ``_prefill_slot`` minus the compute.
+        """
+        cache = state["cache"]
+
+        def scatter(pool, small):
+            return pool.at[:, pages].set(small.astype(pool.dtype))
+
+        layers = jax.tree.map(scatter, cache["layers"], blocks)
+        pos = cache["pos"].at[slot].set(n_tokens.astype(jnp.int32))
+        table = cache["pages"].at[slot].set(row)
+        return dict(
+            state,
+            cache={"layers": layers, "pos": pos, "pages": table},
+            tok=state["tok"].at[slot].set(tok0),
+            remaining=state["remaining"].at[slot].set(
+                jnp.maximum(budget - 1, 0)),
+        )
 
     def _decode_chunk_impl(self, params, state):
         """Decode ``chunk_steps`` tokens for every live slot on device.
@@ -606,20 +745,22 @@ class ContinuousBatchingEngine:
             self.page_pool.unref(p)
         self._slot_pages[b] = []
 
-    def _admit_paged(self, r: Request, slot: int, prompt) -> Any:
-        """Admit one request into ``slot`` under the page allocator.
+    def _acquire_pages(self, toks: tuple, s: int,
+                       budget: int) -> tuple[list, int]:
+        """Pin prefix-cache hit pages and allocate the fresh remainder
+        for a prompt of ``s`` tokens decoding up to ``budget`` more.
 
-        Order matters: prefix-cache hit pages are ``ref``-ed *before*
-        allocating fresh pages, because allocation may evict — pinning
-        first means eviction can never free a page this request is
-        about to read.  On ``PoolExhausted`` the pins are rolled back
-        and the exception propagates (the caller defers admission).
+        Order matters: hit pages are ``ref``-ed *before* allocating,
+        because allocation may evict — pinning first means eviction can
+        never free a page this request is about to read.  On
+        ``PoolExhausted`` the pins are rolled back and the exception
+        propagates (the caller defers or preempts).  Returns ``(row,
+        start)``: the physical pages in position order and the
+        cached-token count (``len(shared) * page_size``).
         """
         ps = self.page_size
-        s = int(prompt.shape[1])
         n_blocks = min(self.pages_per_slot,
-                       -(-(s + r.max_new_tokens + self.spec_k) // ps))
-        toks = tuple(int(x) for x in np.asarray(r.prompt).reshape(-1))
+                       -(-(s + budget + self.spec_k) // ps))
         shared = (self.prefix_cache.lookup(toks)
                   if self.prefix_cache is not None else [])
         for p in shared:
@@ -635,31 +776,191 @@ class ContinuousBatchingEngine:
             if shared:
                 self.prefix_stats["hits"] += 1
                 self.prefix_stats["cached_tokens"] += len(shared) * ps
-        row = shared + fresh
-        self._slot_pages[slot] = list(row)
+        return shared + fresh, len(shared) * ps
+
+    def _intern_prompt(self, toks: tuple, row: list) -> None:
+        """Intern the *full* blocks of ``toks`` (physical pages
+        ``row``) into the prefix cache, once their K/V exists.  Only
+        full blocks: a partial last block still receives its slot's
+        decode writes, so sharing it would let another request read
+        tokens that aren't prompt."""
+        if self.prefix_cache is None:
+            return
+        n_full = min(len(toks) // self.page_size, len(row))
+        self.prefix_cache.insert(toks[:n_full * self.page_size],
+                                 row[:n_full])
+
+    def _park(self, b: int, cx: "_ServeCtx") -> Request:
+        """Preempt slot ``b``: evict its pages, park its state host-side.
+
+        The slot's decode-complete K/V — its admitted token history
+        plus every emitted token but the pending one — is interned
+        block-wise into the prefix cache, whose reference keeps those
+        pages alive after ``_release_slot`` drops the slot's own refs
+        (the partial last block frees immediately).  The request is
+        re-queued carrying its output; readmission resumes it through
+        the prefix-cache extend path with ``prompt' = prompt +
+        output``, recomputing at most one block's worth of tail and
+        emitting the continuation token — bit-identical to never
+        having been preempted.  Under later pool pressure the parked
+        pages may themselves be evicted (refcount 1, cache-only),
+        degrading resume to a longer recompute but never to wrong
+        tokens.
+        """
+        r = cx.slots[b]
+        emitted = r.output[self._slot_base[b]:]
+        # K/V exists for history + emitted[:-1]; emitted[-1] is the
+        # pending decode input (its K/V row is written next step)
+        hist = self._slot_toks[b] + tuple(emitted[:-1])
+        self._intern_prompt(hist, self._slot_pages[b])
+        self._release_slot(b)
+        # freeze the device slot so the chunk loop stops decoding it
+        self.state = dict(
+            self.state,
+            remaining=self.state["remaining"].at[b].set(0))
+        cx.slots[b] = None
+        cx.slot_left[b] = 0
+        r.preemptions += 1
+        self.sched_stats["preemptions"] += 1
+        return r
+
+    def _admit_slot(self, r: Request, b: int, cx: "_ServeCtx") -> bool:
+        """Admit ``r`` into free slot ``b`` (or start its chunked
+        prefill); ``False`` = defer, pool pressure survived preemption.
+
+        A parked request (rid in ``cx.parked``) resumes with
+        ``prompt' = prompt + output`` and the remaining decode budget;
+        the prefix-cache lookup inside ``_acquire_pages`` finds the
+        parked full blocks, so only the tail recomputes.
+        """
+        resume = r.rid in cx.parked
+        if resume:
+            toks = (tuple(int(x) for x in np.asarray(r.prompt)
+                          .reshape(-1)) + tuple(r.output))
+            budget = r.max_new_tokens - len(r.output)
+        else:
+            toks = tuple(int(x) for x in np.asarray(r.prompt).reshape(-1))
+            budget = r.max_new_tokens
+        prompt = jnp.asarray(toks, jnp.int32)[None]
+        s = int(prompt.shape[1])
+        # speculative verify windows write up to spec_k rows past the
+        # last decoded position; keep them in-cache
+        assert s + budget + self.spec_k <= self.max_len, \
+            (s, budget, self.spec_k, self.max_len)
+        if not self.paged:
+            r.prefill_tokens += s
+            self.state, tok0 = self._prefill_slot(
+                self.params, self.draft_params, self.state, prompt,
+                jnp.asarray(b, jnp.int32), jnp.asarray(budget, jnp.int32))
+            self._finish_admit(r, b, tok0, resume, budget, s, 0, cx)
+            return True
+        row = None
+        try:
+            row, start = self._acquire_pages(toks, s, budget)
+        except PoolExhausted:
+            if self.scheduler is not None:
+                running = [(i, cx.slots[i]) for i in range(self.n_slots)
+                           if cx.slots[i] is not None]
+                while running:
+                    v = self.scheduler.pick_victim(running, r)
+                    if v is None:
+                        break
+                    victim = self._park(v, cx)
+                    cx.parked.add(victim.rid)
+                    cx.ready.append(victim)
+                    running = [iq for iq in running if iq[0] != v]
+                    try:
+                        row, start = self._acquire_pages(toks, s, budget)
+                        break
+                    except PoolExhausted:
+                        continue
+            if row is None:
+                return False
+        self._slot_pages[b] = list(row)
+        self._slot_toks[b] = toks
+        self._slot_base[b] = len(r.output) if resume else 0
         row_arr = jnp.asarray(
             row + [GARBAGE_PAGE] * (self.pages_per_slot - len(row)),
             jnp.int32)
-        start = len(shared) * ps
-        r.cached_tokens = start
-        r.prefill_tokens = s - start
-        budget = jnp.asarray(r.max_new_tokens, jnp.int32)
+        r.cached_tokens += start
+        r.prefill_tokens += s - start
+        if self.chunked_prefill:
+            cx.filling[b] = _PrefillProgress(
+                r=r, prompt=prompt, toks=toks, row=list(row),
+                row_arr=row_arr, next_pos=start, budget=budget,
+                resume=resume, cached=start)
+            return True
+        budget_arr = jnp.asarray(budget, jnp.int32)
         if start:
             self.state, tok0 = self._extend_slot(
                 self.params, self.draft_params, self.state, prompt,
-                prompt[:, start:], jnp.asarray(slot, jnp.int32),
-                row_arr, jnp.asarray(start, jnp.int32), budget)
+                prompt[:, start:], jnp.asarray(b, jnp.int32), row_arr,
+                jnp.asarray(start, jnp.int32), budget_arr)
         else:
             self.state, tok0 = self._prefill_slot(
                 self.params, self.draft_params, self.state, prompt,
-                jnp.asarray(slot, jnp.int32), budget, row_arr)
-        if self.prefix_cache is not None:
-            # intern only *full* prompt blocks: a partial last block
-            # still receives this slot's decode writes, so sharing it
-            # would let another request read tokens that aren't prompt
-            n_full = min(s // ps, n_blocks)
-            self.prefix_cache.insert(toks[:n_full * ps], row[:n_full])
-        return tok0
+                jnp.asarray(b, jnp.int32), budget_arr, row_arr)
+        self._intern_prompt(toks, row)
+        self._finish_admit(r, b, tok0, resume, budget, s, start, cx)
+        return True
+
+    def _advance_prefill(self, b: int, cx: "_ServeCtx") -> None:
+        """Run one prefill chunk for the filling slot ``b``; the final
+        chunk installs the slot and emits its first token."""
+        p = cx.filling[b]
+        c = self.prefill_chunk_tokens
+        s = int(p.prompt.shape[1])
+        self.sched_stats["prefill_chunks"] += 1
+        if s - p.next_pos > c:
+            self.state = self._prefill_chunk(
+                self.params, self.state,
+                p.prompt[:, p.next_pos:p.next_pos + c], p.row_arr,
+                jnp.asarray(p.next_pos, jnp.int32))
+            p.next_pos += c
+            return
+        # final chunk: the extend path computes the tail, installs the
+        # slot's table row / pos / budget and seeds decoding (the
+        # speculative draft prefills the full prompt inside it)
+        del cx.filling[b]
+        self.state, tok0 = self._extend_slot(
+            self.params, self.draft_params, self.state, p.prompt,
+            p.prompt[:, p.next_pos:], jnp.asarray(b, jnp.int32),
+            p.row_arr, jnp.asarray(p.next_pos, jnp.int32),
+            jnp.asarray(p.budget, jnp.int32))
+        self._intern_prompt(p.toks, p.row)
+        self._finish_admit(p.r, b, tok0, p.resume, p.budget, s,
+                           p.cached, cx)
+
+    def _finish_admit(self, r: Request, b: int, tok0, resume: bool,
+                      budget: int, s: int, start: int,
+                      cx: "_ServeCtx") -> None:
+        """Stamp and route a just-admitted request: emit its first (or
+        continuation) token, account speculative prefill work, and
+        either retire it or hand the slot to the decode loop."""
+        first = int(tok0)              # blocks -> true TTFT
+        t_now = cx.now() - cx.t0
+        if resume:
+            r.output.append(first)
+            cx.parked.discard(r.rid)
+            self.sched_stats["resumes"] += 1
+        else:
+            r.first_token_s = t_now
+            r.output = [first][: r.max_new_tokens]  # budget 0 -> []
+        if self.speculative:
+            # the draft prefilled the full prompt alongside the
+            # target, which only computed the uncached part
+            computed = s - start
+            r.draft_tokens += s
+            r.verify_tokens += computed
+            self.spec_stats["draft_prefill_tokens"] += s
+            self.spec_stats["target_prefill_tokens"] += computed
+        if budget <= 1:
+            r.done_s = t_now
+            cx.done.append(r)
+            self._release_slot(b)
+        else:
+            cx.slots[b] = r
+            cx.slot_left[b] = budget - 1
 
     # -- host orchestration ---------------------------------------------
     def serve(self, requests: list[Request],
@@ -675,6 +976,15 @@ class ContinuousBatchingEngine:
         arrival_s, and the stamps line up with Director power samples
         that start at t=0).  With ``honor_arrivals=False`` the queue is
         drained as fast as slots free up (Offline scenario).
+
+        Admission is FIFO by arrival unless a ``scheduler`` was given
+        (priority + deadline-slack ordering, optional preemption — see
+        ``repro.serving.scheduler.Scheduler``).  With
+        ``prefill_chunk_tokens > 0`` each loop iteration advances every
+        in-flight prompt by one chunk *and* runs one decode chunk, so
+        decoding slots keep emitting while long prompts fill (chunked
+        prefill; token-identical to monolithic).  ``sched_stats``
+        counts preemptions, resumes, and chunk interleaving per serve.
         """
         counts = collections.Counter(r.rid for r in requests)
         dup = sorted(r for r, c in counts.items() if c > 1)
@@ -686,74 +996,55 @@ class ContinuousBatchingEngine:
         self.reset()
         self.spec_stats = self._zero_spec_stats()
         self.prefix_stats = self._zero_prefix_stats()
+        self.sched_stats = self._zero_sched_stats()
         self.host_syncs = 0            # per-serve, like spec_stats
-        queue = collections.deque(
+        pending = collections.deque(
             sorted(requests, key=lambda r: (r.arrival_s, r.rid)))
-        slots: list[Optional[Request]] = [None] * self.n_slots
-        slot_left = [0] * self.n_slots     # host shadow of `remaining`
-        done: list[Request] = []
-        t0 = now()
-        while queue or any(s is not None for s in slots):
-            t = now() - t0
-            # admit arrived requests into free slots (prefill-into-slot)
+        cx = _ServeCtx(slots=[None] * self.n_slots,
+                       slot_left=[0] * self.n_slots, filling={},
+                       ready=collections.deque(), parked=set(),
+                       done=[], now=now, t0=now())
+        while (pending or cx.ready or cx.filling
+               or any(s is not None for s in cx.slots)):
+            t = now() - cx.t0
+            while pending and (not honor_arrivals
+                               or pending[0].arrival_s <= t):
+                cx.ready.append(pending.popleft())
+            if self.scheduler is not None and len(cx.ready) > 1:
+                ordered = self.scheduler.order(cx.ready, t)
+                cx.ready.clear()
+                cx.ready.extend(ordered)
+            # admit arrived requests into free slots (prefill-into-slot
+            # or, chunked, start the prompt's chunk cursor)
             for b in range(self.n_slots):
-                if slots[b] is not None or not queue:
+                if (cx.slots[b] is not None or b in cx.filling
+                        or not cx.ready):
                     continue
-                if honor_arrivals and queue[0].arrival_s > t:
+                r = cx.ready.popleft()
+                if not self._admit_slot(r, b, cx):
+                    # defer: a retiring slot will free its pages
+                    cx.ready.appendleft(r)
+                    if (not cx.filling and not any(
+                            s is not None for s in cx.slots)):
+                        raise RuntimeError(
+                            f"request {r.rid} needs more KV pages "
+                            f"than eviction can ever free (pool of "
+                            f"{self.page_pool.n_pages - 1} usable "
+                            f"pages)")
                     break
-                r = queue.popleft()
-                prompt = jnp.asarray(r.prompt, jnp.int32)[None]
-                # speculative verify windows write up to spec_k rows
-                # past the last decoded position; keep them in-cache
-                assert (prompt.shape[1] + r.max_new_tokens + self.spec_k
-                        <= self.max_len), \
-                    (prompt.shape[1], r.max_new_tokens, self.spec_k,
-                     self.max_len)
-                if self.paged:
-                    try:
-                        tok0 = self._admit_paged(r, b, prompt)
-                    except PoolExhausted as exc:
-                        if not any(s is not None for s in slots):
-                            raise RuntimeError(
-                                f"request {r.rid} needs more KV pages "
-                                f"than eviction can ever free (pool of "
-                                f"{self.page_pool.n_pages - 1} usable "
-                                f"pages)") from exc
-                        # defer: a retiring slot will free its pages
-                        queue.appendleft(r)
+            # chunked prefill: one chunk per filling slot per iteration
+            for b in list(cx.filling):
+                self._advance_prefill(b, cx)
+            if not any(s is not None for s in cx.slots):
+                if cx.filling:
+                    continue           # keep chunking the prompt(s)
+                if not cx.ready:
+                    if not pending:
                         break
-                else:
-                    r.prefill_tokens = int(prompt.shape[1])
-                    self.state, tok0 = self._prefill_slot(
-                        self.params, self.draft_params, self.state,
-                        prompt, jnp.asarray(b, jnp.int32),
-                        jnp.asarray(r.max_new_tokens, jnp.int32))
-                first = int(tok0)          # blocks -> true TTFT
-                r.first_token_s = now() - t0
-                r.output = [first][: r.max_new_tokens]  # budget 0 -> []
-                if self.speculative:
-                    # the draft prefilled the full prompt alongside the
-                    # target, which only computed the uncached part
-                    computed = int(prompt.shape[1]) - r.cached_tokens
-                    r.draft_tokens += int(prompt.shape[1])
-                    r.verify_tokens += computed
-                    self.spec_stats["draft_prefill_tokens"] += \
-                        int(prompt.shape[1])
-                    self.spec_stats["target_prefill_tokens"] += computed
-                if r.max_new_tokens <= 1:
-                    r.done_s = r.first_token_s
-                    done.append(r)
-                    self._release_slot(b)
-                else:
-                    slots[b] = r
-                    slot_left[b] = r.max_new_tokens - 1
-            if not any(s is not None for s in slots):
-                if not queue:
-                    break
-                if honor_arrivals:
-                    dt = queue[0].arrival_s - (now() - t0)
-                    if dt > 0:
-                        sleep(dt)
+                    if honor_arrivals:
+                        dt = pending[0].arrival_s - (now() - cx.t0)
+                        if dt > 0:
+                            sleep(dt)
                 continue
             # one fused multi-token chunk; a single host sync after it
             if self.speculative:
@@ -767,9 +1058,12 @@ class ContinuousBatchingEngine:
                                                      self.state)
                 buf_np = np.asarray(jax.device_get(buf))
             self.host_syncs += 1
-            t_chunk = now() - t0
+            self.sched_stats["decode_chunks"] += 1
+            if cx.filling:             # decode emitted while a prompt
+                self.sched_stats["interleaved_chunks"] += 1  # filled
+            t_chunk = now() - cx.t0
             for b in range(self.n_slots):
-                r = slots[b]
+                r = cx.slots[b]
                 if r is None:
                     continue
                 if self.speculative:
@@ -778,9 +1072,9 @@ class ContinuousBatchingEngine:
                             for x in buf_np[b, i, :n_emit[b, i]]]
                 else:
                     toks = [int(x) for x in buf_np[b]]
-                take = min(slot_left[b], len(toks))
+                take = min(cx.slot_left[b], len(toks))
                 r.output.extend(toks[:take])
-                slot_left[b] -= take
+                cx.slot_left[b] -= take
                 if self.speculative:
                     rounds_b = int((n_emit[b] > 0).sum())
                     r.draft_tokens += int(out["draft_fwd"][b])
@@ -790,14 +1084,15 @@ class ContinuousBatchingEngine:
                     self.spec_stats["accepted"] += int(out["accepted"][b])
                     self.spec_stats["draft_fwd"] += int(out["draft_fwd"][b])
                     self.spec_stats["emitted"] += take
-                if slot_left[b] == 0:       # retire; slot free to refill
+                if cx.slot_left[b] == 0:    # retire; slot free to refill
                     r.done_s = t_chunk
-                    done.append(r)
-                    slots[b] = None
+                    cx.done.append(r)
+                    cx.slots[b] = None
                     self._release_slot(b)
-        return done
+        return cx.done
 
     def tokens_per_request(self, requests: list[Request]) -> int:
+        """Total emitted tokens (the efficiency denominators' work)."""
         return sum(len(r.output or []) for r in requests)
 
 

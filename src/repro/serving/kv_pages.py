@@ -60,15 +60,18 @@ class PagePool:
         self.reset()
 
     def reset(self) -> None:
+        """Return every page to the free list and zero all refcounts."""
         self._free = list(reversed(self._order))   # pop() -> order[0] first
         self.refcount = [0] * self.n_pages
         self.peak_used = 0
 
     # -- queries ----------------------------------------------------------
     def free_pages(self) -> int:
+        """Pages currently allocatable."""
         return len(self._free)
 
     def used_pages(self) -> int:
+        """Pages held by at least one reference (garbage page excluded)."""
         return (self.n_pages - 1) - len(self._free)
 
     # -- operations -------------------------------------------------------

@@ -37,6 +37,12 @@ class _Node:
 
 
 class PrefixCache:
+    """Radix tree over full prompt pages: lookup returns the pages of
+    the longest interned block-prefix (each holding a cache ref in the
+    ``PagePool``), insert interns a served prompt's full pages, and LRU
+    eviction under pool pressure frees only pages whose sole owner is
+    the cache."""
+
     def __init__(self, pool: PagePool, page_size: int):
         if page_size != pool.page_size:
             raise ValueError("page_size must match the pool's")
@@ -52,6 +58,7 @@ class PrefixCache:
 
     @property
     def cached_tokens(self) -> int:
+        """Prompt tokens currently interned (nodes x page size)."""
         return self.n_nodes * self.page_size
 
     # -- lookup / insert --------------------------------------------------

@@ -163,6 +163,27 @@ class ShardedContinuousBatchingEngine(ContinuousBatchingEngine):
         )(params, dparams, state, tokens, suffix, slot, pages, start,
           budget)
 
+    def _prefill_chunk_impl(self, params, state, chunk, pages, start):
+        base = super()._prefill_chunk_impl
+        return self._shard_mapped(
+            base,
+            in_specs=(self._param_specs, self._state_specs)
+            + (P(),) * 3,
+            out_specs=self._state_specs,
+        )(params, state, chunk, pages, start)
+
+    def _install_slot_impl(self, state, blocks, tok0, slot, pages,
+                           row, n_tokens, budget):
+        # handed-off K/V blocks partition by KV head exactly like the
+        # pool leaves they scatter into
+        base = super()._install_slot_impl
+        return self._shard_mapped(
+            base,
+            in_specs=(self._state_specs, self._cache_specs["layers"])
+            + (P(),) * 6,
+            out_specs=self._state_specs,
+        )(state, blocks, tok0, slot, pages, row, n_tokens, budget)
+
     def _decode_chunk_impl(self, params, state):
         base = super()._decode_chunk_impl
         return self._shard_mapped(
