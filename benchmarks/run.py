@@ -22,8 +22,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (accuracy_cost, efficiency_trends,
-                            energy_per_inference, power_breakdown,
-                            power_range, prefix_cache,
+                            energy_per_inference, fleet_sweep,
+                            power_breakdown, power_range, prefix_cache,
                             quantization_efficiency, resilience,
                             roofline_table, scale_sweep, scaling_energy,
                             serving_throughput, slo_sweep,
@@ -47,6 +47,7 @@ def main(argv=None) -> None:
         ("resilience", resilience),
         ("prefix_cache", prefix_cache),
         ("slo_sweep", slo_sweep),
+        ("fleet_sweep", fleet_sweep),
     ]
     print("name,us_per_call,derived")
     n_rows = 0

@@ -39,7 +39,7 @@ for path in (ROOT, os.path.join(ROOT, "src")):
     if path not in sys.path:
         sys.path.insert(0, path)
 
-PACKAGES = ("repro.harness", "repro.serving")
+PACKAGES = ("repro.harness", "repro.serving", "repro.fleet")
 DOC_FILES = ("README.md",) + tuple(
     os.path.join("docs", f)
     for f in sorted(os.listdir(os.path.join(ROOT, "docs")))

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 CI gate: static analysis + full test suite + benchmark smoke
 # + harness smoke + sharded (virtual-mesh) smoke + chaos smoke +
-# paged-serving parity + SLO smoke + docs check.  Mirrors ROADMAP.md's
+# paged-serving parity + SLO smoke + fleet smoke + docs check.
+# Mirrors ROADMAP.md's
 # "Tier-1 verify" command; run from the repo root.  Each stage prints
 # wall-time banners so a gate failure localizes to a stage in the log.
 set -euo pipefail
@@ -61,7 +62,15 @@ stage slo-smoke env \
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     python -m benchmarks.slo_sweep --smoke
 
-# 8. docs check: every public name in repro.harness / repro.serving
-#    carries a docstring (MRO-aware), and every markdown link in
-#    README.md + docs/ resolves (paths and #fragments)
+# 8. fleet smoke: the 24 h autoscaling Pareto sweep — the autoscaled
+#    fleet must beat static max-N on J/token at equal-or-better TTFT
+#    tail attainment, capped replicas must respect the watt cap, and
+#    per-replica energy must sum to the pdu fleet total (R11)
+stage fleet-smoke env \
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m benchmarks.fleet_sweep --smoke
+
+# 9. docs check: every public name in repro.harness / repro.serving /
+#    repro.fleet carries a docstring (MRO-aware), and every markdown
+#    link in README.md + docs/ resolves (paths and #fragments)
 stage check-docs python scripts/check_docs.py

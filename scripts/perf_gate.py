@@ -64,6 +64,10 @@ CALIBRATIONS = {
     # in the sweep is calibrated to measured prefill time, so rates
     # track this member tightly)
     "qps_at_slo_per_j": "qps_at_slo_per_j.monolithic.tokens_per_s",
+    # the fleet sweep's virtual-time rates are anchored to the measured
+    # warm decode token time of a real engine (the calibration leaf),
+    # so they track machine speed exactly like the serving groups
+    "fleet": "fleet.calibration.tokens_per_s",
 }
 # the virtual-mesh scale points (TP over forced host devices, threaded
 # replica fleets) carry inherently higher run-to-run noise than the
@@ -77,7 +81,15 @@ GROUP_TOL_FLOOR = {"scale": 0.30,
                    # point while a real collapse (preemptive serving
                    # losing its 2.5x sustainable-QPS edge to 1.0x)
                    # still fails hard
-                   "qps_at_slo_per_j": 0.25}
+                   "qps_at_slo_per_j": 0.25,
+                   # the fleet sim is deterministic in *virtual* time,
+                   # but its unit is one measured decode-token time —
+                   # a single-kernel timing whose jitter lands directly
+                   # on every rate in the group; the floor absorbs
+                   # that while a real collapse (autoscaling losing
+                   # its J/token edge, speedup 1.1x -> 1.0x) still
+                   # fails via the hard asserts in the benchmark
+                   "fleet": 0.30}
 # only rate-like leaves are gated; counters/shares are informational.
 # meter_samples_per_s guards the multi-channel metering path itself
 # (channel-samples produced per second of metering wall time): extra
@@ -116,8 +128,8 @@ def flatten(tree: dict, prefix: str = "") -> dict:
 
 def collect(smoke: bool = True) -> dict:
     """Run the gated benchmarks and return their nested metrics."""
-    from benchmarks import (prefix_cache, resilience, scale_sweep,
-                            serving_throughput, slo_sweep)
+    from benchmarks import (fleet_sweep, prefix_cache, resilience,
+                            scale_sweep, serving_throughput, slo_sweep)
 
     return {
         "serving": serving_throughput.metrics(smoke=smoke),
@@ -125,6 +137,7 @@ def collect(smoke: bool = True) -> dict:
         "resilience": resilience.metrics(smoke=smoke),
         "prefix_cache": prefix_cache.metrics(smoke=smoke),
         "qps_at_slo_per_j": slo_sweep.metrics(smoke=smoke),
+        "fleet": fleet_sweep.metrics(smoke=smoke),
     }
 
 

@@ -5,6 +5,8 @@ suffix convention:
 
   ``_w``/``_watts`` = W,  ``_j``/``_joules`` = J,  ``_s`` = seconds,
   ``_ms`` = milliseconds,  ``_hz``/``_qps`` = 1/s,
+  ``_wh``/``_kwh`` = scale-tagged joules (3.6e3 / 3.6e6 J),
+  ``_gco2`` = grams of CO2,  ``_gco2_per_kwh`` = grid carbon intensity,
   ``x_per_y`` = unit(x)/unit(y)  (counts are dimensionless).
 
 Units propagate through assignments, arithmetic, calls, subscripts
@@ -34,6 +36,7 @@ from __future__ import annotations
 
 import ast
 import dataclasses
+import math
 import re
 from typing import Optional
 
@@ -41,8 +44,10 @@ from repro.analysis.findings import Finding, relpath
 from repro.analysis.purity import iter_py_files
 
 # --- the unit algebra ----------------------------------------------------
-# Base dimensions: J (energy), s (time).  W = J * s^-1.
-# ``scale`` disambiguates s vs ms (None = unknown/any scale, the state
+# Base dimensions: J (energy), s (time), g (grams of CO2).
+# W = J * s^-1; Wh and kWh are scale-tagged joules (3.6e3 / 3.6e6),
+# gCO2/kWh a scale-tagged g/J.  ``scale`` disambiguates the variants
+# within one dimension family (None = unknown/any scale, the state
 # after multiplying by a bare literal).
 
 
@@ -61,8 +66,13 @@ class Unit:
         s = num or "1"
         if den:
             s += f"/{den}"
-        if self.scale not in (1.0, None) and self.dims == (("s", 1),):
-            s = {1e-3: "ms"}.get(self.scale, s)
+        if self.scale not in (1.0, None):
+            if self.dims == (("s", 1),):
+                s = {1e-3: "ms"}.get(self.scale, s)
+            elif self.dims == (("J", 1),):
+                s = {3.6e3: "Wh", 3.6e6: "kWh"}.get(self.scale, s)
+            elif self.dims == (("J", -1), ("g", 1)):
+                s = {1.0 / 3.6e6: "g/kWh"}.get(self.scale, s)
         return s
 
 
@@ -78,6 +88,24 @@ MS = _mk({"s": 1}, scale=1e-3)
 W = _mk({"J": 1, "s": -1})
 HZ = _mk({"s": -1})
 PER_J = _mk({"J": -1})
+WH = _mk({"J": 1}, scale=3.6e3)
+KWH = _mk({"J": 1}, scale=3.6e6)
+GCO2 = _mk({"g": 1})
+GCO2_PER_KWH = _mk({"J": -1, "g": 1}, scale=1.0 / 3.6e6)
+
+# dimension families with more than one scale variant in the suffix
+# table (s vs ms; J vs Wh vs kWh; their inverses; g/J vs g/kWh; plain
+# g vs the g*(1/3.6e6) that J * gCO2/kWh leaves behind): multiplying
+# by a bare literal inside one of these forgets the scale (the literal
+# IS the conversion), and products keep their computed scale instead
+# of canonicalizing to 1.0
+_SCALED_DIMS = {
+    (("s", 1),),
+    (("J", 1),),
+    (("J", -1),),
+    (("J", -1), ("g", 1)),
+    (("g", 1),),
+}
 
 # ANY: bare numeric literal / unit-preserving unknown — compatible with
 # everything, disappears in products.
@@ -93,10 +121,15 @@ def _combine(a: Unit, b: Unit, sign: int) -> Optional[Unit]:
         scale = None
     else:
         scale = a.scale * (b.scale if sign > 0 else 1.0 / b.scale)
-        # canonicalize: scale only matters for pure time units
+        # canonicalize: scale only matters inside the multi-variant
+        # dimension families (time, energy, carbon intensity)
         if tuple(sorted((d, p) for d, p in dims.items() if p)) not in \
-                ((("s", 1),),):
+                _SCALED_DIMS:
             scale = 1.0 if scale else scale
+        elif math.isclose(scale, 1.0):
+            # kWh * (g/kWh) computes 3.6e6 * (1/3.6e6): snap the
+            # float dust so round-trip conversions land on canonical
+            scale = 1.0
     return _mk(dims, scale)
 
 
@@ -105,7 +138,7 @@ def compatible(a: Unit, b: Unit) -> bool:
         return False
     if a.scale is None or b.scale is None:
         return True
-    return a.scale == b.scale
+    return math.isclose(a.scale, b.scale)
 
 
 # --- suffix convention ---------------------------------------------------
@@ -116,6 +149,8 @@ _UNIT_WORDS = {
     "s": S, "sec": S, "secs": S, "second": S, "seconds": S,
     "ms": MS,
     "hz": HZ, "qps": HZ,
+    "wh": WH, "kwh": KWH,
+    "gco2": GCO2,
 }
 # count-like words are dimensionless numerators/denominators in
 # ``x_per_y`` names
@@ -123,6 +158,7 @@ _COUNT_WORDS = {
     "tok", "toks", "token", "tokens", "sample", "samples", "query",
     "queries", "inference", "inferences", "goodput", "request",
     "requests", "step", "steps", "chunk", "chunks", "meter",
+    "replica", "replicas", "arrival", "arrivals",
 }
 # bare names that ARE a unit (no suffix needed); single letters are
 # excluded — a local named ``w`` or ``s`` is usually an array or a
@@ -473,16 +509,18 @@ class _UnitChecker:
     @staticmethod
     def _product(a, b, sign) -> Optional[Unit]:
         # literal x unit keeps the dimension but forgets the scale
-        # (the 1e3 in ``t_s * 1e3`` IS a scale conversion)
+        # (the 1e3 in ``t_s * 1e3`` IS a scale conversion; same for
+        # the 3.6e6 in ``energy_j / 3.6e6``)
         if a is ANY_LITERAL and b is ANY_LITERAL:
             return ANY_LITERAL
         if a is ANY_LITERAL and b is not None:
             u = b if sign > 0 else _combine(DIMENSIONLESS, b, -1)
             return dataclasses.replace(u, scale=None) \
-                if u.dims == (("s", 1),) or b.dims == (("s", 1),) else u
+                if u.dims in _SCALED_DIMS or b.dims in _SCALED_DIMS \
+                else u
         if b is ANY_LITERAL and a is not None:
             return dataclasses.replace(a, scale=None) \
-                if a.dims == (("s", 1),) else a
+                if a.dims in _SCALED_DIMS else a
         if a is None or b is None:
             return None
         return _combine(a, b, sign)
@@ -588,6 +626,10 @@ def _conv_hint(want: Unit, got: Unit) -> str:
                           "seconds (energy = integral of power)",
         (str(S), str(MS)): "divide the milliseconds by 1e3",
         (str(MS), str(S)): "multiply the seconds by 1e3",
+        (str(J), str(KWH)): "multiply the kilowatt-hours by 3.6e6",
+        (str(KWH), str(J)): "divide the joules by 3.6e6",
+        (str(J), str(WH)): "multiply the watt-hours by 3.6e3",
+        (str(WH), str(J)): "divide the joules by 3.6e3",
     }
     return pairs.get((str(want), str(got)),
                      f"expected {want}, got {got} — convert "
@@ -595,7 +637,8 @@ def _conv_hint(want: Unit, got: Unit) -> str:
 
 
 DEFAULT_SUBDIRS = ("src/repro/power", "src/repro/core",
-                   "src/repro/harness", "benchmarks")
+                   "src/repro/harness", "src/repro/fleet",
+                   "benchmarks")
 
 
 def run(root: str, subdirs: tuple = DEFAULT_SUBDIRS) -> list[Finding]:

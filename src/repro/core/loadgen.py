@@ -17,7 +17,10 @@ runners directly only when composing a new scenario.
   arrival schedule is handed to a continuous-batching engine's
   admission queue up front; the engine overlaps requests and reports
   per-request TTFT/TPOT, from which throughput and SLO compliance are
-  derived).
+  derived).  ``run_server_trace`` is the trace-driven sibling: the
+  caller supplies the whole arrival schedule explicitly (e.g. a
+  compressed 24 h diurnal day from ``repro.fleet.traces``) and shares
+  the queue form's admission/shedding/metric semantics.
 
 Implements the paper's minimum-duration rule: workloads shorter than
 ``min_duration_s`` (60 s by default) are looped until the threshold is
@@ -404,6 +407,62 @@ def run_server_queue(serve: Callable[[list[tuple[dict, float]]], list],
     if fault_plan is not None:
         times = sorted(times + [float(b)
                                 for b in fault_plan.burst_arrivals()])
+    return _serve_schedule(serve, qsl, times, target_qps=target_qps,
+                           latency_slo_s=latency_slo_s,
+                           min_duration_s=min_duration_s,
+                           deadline_s=deadline_s, shed=shed,
+                           ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s)
+
+
+def run_server_trace(serve: Callable[[list[tuple[dict, float]]], list],
+                     qsl: QuerySampleLibrary, *, arrivals_s,
+                     latency_slo_s: float,
+                     min_duration_s: float = 0.0,
+                     deadline_s: Optional[float] = None,
+                     shed: Optional[ShedPolicy] = None,
+                     fault_plan=None,
+                     ttft_slo_s: Optional[float] = None,
+                     tpot_slo_s: Optional[float] = None,
+                     target_qps: Optional[float] = None) -> ServerMetrics:
+    """Server scenario driven by an *explicit* arrival schedule.
+
+    The trace-driven sibling of ``run_server_queue``: instead of
+    generating Poisson arrivals at a constant ``target_qps``, the
+    caller hands the whole schedule (``arrivals_s`` — seconds from run
+    start, e.g. a compressed 24 h ``repro.fleet.traces`` diurnal day)
+    and the admission, shedding, conservation, and metric semantics
+    are shared verbatim with the Poisson form.  ``target_qps``
+    defaults to the trace's mean rate (it only feeds ``ShedPolicy``'s
+    default drain rate); ``fault_plan`` burst arrivals splice into the
+    schedule exactly as in the Poisson form.
+    """
+    times = sorted(float(a) for a in np.asarray(arrivals_s, float))
+    if any(t < 0 for t in times):
+        raise ValueError("run_server_trace: negative arrival time in "
+                         "the schedule")
+    if fault_plan is not None:
+        times = sorted(times + [float(b)
+                                for b in fault_plan.burst_arrivals()])
+    if target_qps is None:
+        span = times[-1] if times else 0.0
+        target_qps = len(times) / span if span > 0 else 1.0
+    return _serve_schedule(serve, qsl, times, target_qps=target_qps,
+                           latency_slo_s=latency_slo_s,
+                           min_duration_s=min_duration_s,
+                           deadline_s=deadline_s, shed=shed,
+                           ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s)
+
+
+def _serve_schedule(serve, qsl, times: list, *, target_qps: float,
+                    latency_slo_s: float, min_duration_s: float,
+                    deadline_s: Optional[float],
+                    shed: Optional[ShedPolicy],
+                    ttft_slo_s: Optional[float],
+                    tpot_slo_s: Optional[float]) -> ServerMetrics:
+    """Shared admission + serve + metrics body of the two Server
+    forms: qid stamping, shedding, conservation checks, goodput
+    accounting, and tail-SLO attainment over one explicit arrival-time
+    list."""
     queries = [(dict(qsl.sample(i), qid=i), t)
                for i, t in enumerate(times)]
 

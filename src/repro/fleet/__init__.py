@@ -1,0 +1,45 @@
+"""Energy-aware fleet autoscaling (the ML.ENERGY axis).
+
+The paper's measurements fix the system under test; ``repro.fleet``
+asks what the same metering discipline says about a *fleet* under
+time-varying load, where idle watts, cold starts, and provisioning
+slack dominate the bill.  The subsystem is four small layers:
+
+- ``traces``     — seeded diurnal/bursty/ramp arrival generators and a
+  time-varying grid-carbon trace; a 24 h day compresses onto a test
+  window without changing the arrival count.
+- ``lifecycle``  — the replica state machine (cold/starting/warm-idle/
+  busy/draining/dead), the DVFS power-cap curve, and the exact
+  piecewise-constant ``PowerTrace`` each replica bills into.
+- ``controller`` / ``routing`` — pluggable scaling policies behind a
+  hysteresis wrapper, and load/energy/carbon-aware request placement.
+- ``simulator`` / ``sut`` — the deterministic event loop and the
+  ``FleetSUT`` adapter that keeps the one-call ``PowerRun`` shape with
+  per-replica power domains under the fleet pdu (R11 exact).
+
+``benchmarks/fleet_sweep.py`` is the headline consumer: the 24 h
+SLO-vs-joules-vs-provisioned-watts Pareto table.
+"""
+from repro.fleet.controller import (FleetController, Observation,
+                                    POLICIES, QueueDepth, ScalingPolicy,
+                                    SloSlack, TargetUtilization)
+from repro.fleet.lifecycle import (DVFSCurve, PowerTrace, ReplicaSpec,
+                                   STATES)
+from repro.fleet.routing import (CarbonAware, EnergyAware, LeastLoaded,
+                                 ROUTERS, ReplicaView, Router,
+                                 RoundRobin)
+from repro.fleet.simulator import FleetRecord, FleetSim
+from repro.fleet.sut import FleetSUT
+from repro.fleet.traces import (ArrivalTrace, CarbonTrace, TRACES,
+                                bursty_trace, diurnal_trace, ramp_trace)
+
+__all__ = [
+    "ArrivalTrace", "CarbonTrace", "TRACES",
+    "bursty_trace", "diurnal_trace", "ramp_trace",
+    "DVFSCurve", "PowerTrace", "ReplicaSpec", "STATES",
+    "FleetController", "Observation", "POLICIES", "QueueDepth",
+    "ScalingPolicy", "SloSlack", "TargetUtilization",
+    "CarbonAware", "EnergyAware", "LeastLoaded", "ROUTERS",
+    "ReplicaView", "Router", "RoundRobin",
+    "FleetRecord", "FleetSim", "FleetSUT",
+]

@@ -37,7 +37,7 @@ from repro.harness.sut import (  # noqa: F401
 )
 from repro.harness.scenarios import (  # noqa: F401
     SCENARIOS, MultiStream, Offline, Scenario, ScenarioOutcome, Server,
-    SingleStream,
+    SingleStream, TraceServer,
 )
 from repro.harness.power_run import (  # noqa: F401
     PowerRun, SubmissionResult, analyzer_for_scale,

@@ -412,6 +412,61 @@ class TestUnitRules:
         # tokens/J * J = dimensionless, assigned to a watts name
         assert _rules(out) == ["UNT002"]
 
+    def test_joules_plus_watt_hours_unt001(self, tmp_path):
+        # Wh is scale-tagged joules (3.6e3 J): adding it to raw J
+        # without converting is the classic 3600x billing bug
+        out = self.run(tmp_path, """
+            def total(energy_j, energy_wh):
+                return energy_j + energy_wh
+        """)
+        assert _rules(out) == ["UNT001"]
+        assert "Wh" in out[0].message
+
+    def test_kwh_conversion_is_clean(self, tmp_path):
+        # explicit rescaling by the literal factor forgets the scale
+        # tag, so J / 3.6e6 may be named kwh (and Wh * 3.6e3 named j)
+        out = self.run(tmp_path, """
+            def bill(energy_j, energy_wh):
+                energy_kwh = energy_j / 3.6e6
+                back_j = energy_wh * 3.6e3
+                return energy_kwh, back_j
+        """)
+        assert out == []
+
+    def test_gco2_from_kwh_times_intensity_is_clean(self, tmp_path):
+        # kWh (3.6e6-tagged J) * gCO2/kWh (g per 3.6e6 J) = plain grams
+        out = self.run(tmp_path, """
+            def footprint(energy_kwh, intensity_gco2_per_kwh):
+                emitted_gco2 = energy_kwh * intensity_gco2_per_kwh
+                return emitted_gco2
+        """)
+        assert out == []
+
+    def test_gco2_from_raw_joules_flags(self, tmp_path):
+        # J * gCO2/kWh keeps the 1/3.6e6 scale: naming it plain
+        # gCO2 without the kWh conversion is off by 3.6e6
+        out = self.run(tmp_path, """
+            def footprint(energy_j, intensity_gco2_per_kwh):
+                emitted_gco2 = energy_j * intensity_gco2_per_kwh
+                return emitted_gco2
+        """)
+        assert _rules(out) == ["UNT002"]
+
+    def test_intensity_returned_as_grams_unt004(self, tmp_path):
+        out = self.run(tmp_path, """
+            def emitted_gco2(intensity_gco2_per_kwh):
+                return intensity_gco2_per_kwh
+        """)
+        assert _rules(out) == ["UNT004"]
+
+    def test_kwh_kwarg_mismatch_hint_unt003(self, tmp_path):
+        out = self.run(tmp_path, """
+            def go(energy_j, bill):
+                bill(energy_kwh=energy_j)
+        """)
+        assert _rules(out) == ["UNT003"]
+        assert "divide the joules by 3.6e6" in out[0].hint
+
 
 # --- suppression, baseline, runner, CLI ----------------------------------
 

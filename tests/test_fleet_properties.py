@@ -1,0 +1,131 @@
+"""Property tests for the fleet arrival-trace generators.
+
+Deterministic invariants run unconditionally; hypothesis widens the
+same invariants over the parameter space when the optional dep is
+installed (CI has it; the pinned container may not).
+"""
+import numpy as np
+import pytest
+
+from repro.fleet import (CarbonTrace, TRACES, bursty_trace, diurnal_trace,
+                         ramp_trace)
+
+
+def _all_traces(seed=0, horizon_s=2000.0):
+    return [
+        diurnal_trace(peak_qps=0.08, trough_qps=0.01,
+                      horizon_s=horizon_s, period_s=horizon_s, seed=seed),
+        bursty_trace(base_qps=0.02, burst_qps=0.1, burst_period_s=500.0,
+                     burst_duration_s=100.0, horizon_s=horizon_s,
+                     seed=seed),
+        ramp_trace(start_qps=0.01, end_qps=0.1, horizon_s=horizon_s,
+                   seed=seed),
+    ]
+
+
+def test_registry_covers_generators():
+    assert set(TRACES) == {"diurnal", "bursty", "ramp"}
+
+
+def test_arrivals_sorted_in_horizon_non_negative_gaps():
+    for tr in _all_traces():
+        a = tr.arrivals_s
+        assert a.size > 0, tr.label
+        assert float(a[0]) >= 0.0
+        assert float(a[-1]) <= tr.horizon_s
+        assert np.all(np.diff(a) >= 0.0), tr.label
+
+
+def test_seeded_determinism_and_seed_sensitivity():
+    for a, b in zip(_all_traces(seed=7), _all_traces(seed=7)):
+        assert np.array_equal(a.arrivals_s, b.arrivals_s), a.label
+    # different seed -> different sample path (same process)
+    for a, b in zip(_all_traces(seed=7), _all_traces(seed=8)):
+        assert not np.array_equal(a.arrivals_s, b.arrivals_s), a.label
+
+
+def test_compression_conserves_count_and_order():
+    for tr in _all_traces():
+        for factor in (2.0, 86400.0 / 180.0):
+            c = tr.compress(factor)
+            assert c.n_arrivals == tr.n_arrivals, tr.label
+            assert c.horizon_s == pytest.approx(tr.horizon_s / factor)
+            assert np.all(np.diff(c.arrivals_s) >= 0.0)
+            # compression scales time, not structure
+            assert np.allclose(c.arrivals_s * factor, tr.arrivals_s)
+            # mean rate scales inversely with the horizon
+            assert c.mean_qps == pytest.approx(tr.mean_qps * factor)
+
+
+def test_diurnal_peak_exceeds_trough_rate():
+    tr = diurnal_trace(peak_qps=0.1, trough_qps=0.005, horizon_s=86400.0,
+                       period_s=86400.0, seed=3)
+    # trough at t=0 (raised cosine), peak half a period in
+    trough = tr.rate_qps(0.0, window_s=8640.0)
+    peak = tr.rate_qps(43200.0, window_s=8640.0)
+    assert peak > 3.0 * max(trough, 1e-9)
+
+
+def test_bursty_duration_validation():
+    with pytest.raises(ValueError):
+        bursty_trace(base_qps=0.01, burst_qps=0.1, burst_period_s=100.0,
+                     burst_duration_s=200.0, horizon_s=1000.0)
+
+
+def test_carbon_trace_intensity_and_emissions():
+    ct = CarbonTrace(base_gco2_per_kwh=450.0, swing_gco2_per_kwh=250.0,
+                     period_s=86400.0)
+    # base + swing*cos: max at t=0, min half a period in
+    assert ct.intensity_gco2_per_kwh(0.0) == pytest.approx(700.0)
+    assert ct.intensity_gco2_per_kwh(43200.0) == pytest.approx(200.0)
+    # 1 kWh at the peak emits 700 g
+    assert ct.emitted_gco2(3.6e6, 0.0) == pytest.approx(700.0)
+    # emissions are additive over samples
+    e = ct.emitted_gco2(np.array([3.6e6, 3.6e6]), np.array([0.0, 43200.0]))
+    assert e == pytest.approx(900.0)
+
+
+# --- hypothesis widening (optional dep) ----------------------------------
+# guarded per-section (not module-level importorskip) so the
+# deterministic invariants above still run where hypothesis is absent
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    RATE = st.floats(min_value=1e-3, max_value=0.2, allow_nan=False)
+    SEED = st.integers(min_value=0, max_value=2**31 - 1)
+
+    @given(peak=RATE, frac=st.floats(min_value=0.01, max_value=1.0),
+           seed=SEED)
+    @settings(max_examples=50, deadline=None)
+    def test_prop_diurnal_sorted_bounded(peak, frac, seed):
+        tr = diurnal_trace(peak_qps=peak, trough_qps=peak * frac,
+                           horizon_s=5000.0, period_s=5000.0, seed=seed)
+        a = tr.arrivals_s
+        if a.size:
+            assert float(a[0]) >= 0.0 and float(a[-1]) <= tr.horizon_s
+            assert np.all(np.diff(a) >= 0.0)
+
+    @given(peak=RATE, seed=SEED,
+           factor=st.floats(min_value=1.001, max_value=1e4))
+    @settings(max_examples=50, deadline=None)
+    def test_prop_compress_conserves_count(peak, seed, factor):
+        tr = diurnal_trace(peak_qps=peak, trough_qps=peak / 4,
+                           horizon_s=4000.0, period_s=4000.0, seed=seed)
+        c = tr.compress(factor)
+        assert c.n_arrivals == tr.n_arrivals
+        assert c.horizon_s == pytest.approx(tr.horizon_s / factor)
+        assert np.all(np.diff(c.arrivals_s) >= 0.0)
+
+    @given(start=RATE, end=RATE, seed=SEED)
+    @settings(max_examples=50, deadline=None)
+    def test_prop_ramp_deterministic_per_seed(start, end, seed):
+        a = ramp_trace(start_qps=start, end_qps=end, horizon_s=3000.0,
+                       seed=seed)
+        b = ramp_trace(start_qps=start, end_qps=end, horizon_s=3000.0,
+                       seed=seed)
+        assert np.array_equal(a.arrivals_s, b.arrivals_s)

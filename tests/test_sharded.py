@@ -232,6 +232,51 @@ def test_replica_energy_sums_to_fleet_total():
     assert set(r.per_request_energy_j) == set(rids)
 
 
+def test_idle_replica_billed_at_idle_floor():
+    """ReplicatedSUT idle-energy guard: a replica whose round-robin
+    share is empty still draws its idle floor for the whole window —
+    billed into the fleet total, not silently zero (the fleet-J/token
+    denominator must include provisioned-but-idle capacity)."""
+    from repro.configs import get_config, reduce_config
+    from repro.core.analyzer import AnalyzerSpec, VirtualAnalyzer
+    from repro.core.director import Director
+    from repro.core.summarizer import _trapz
+    from repro.harness import PowerRun, ReplicatedSUT, Server
+    from repro.models import build_model
+    from repro.models.param import init_params
+
+    cfg = reduce_config(get_config("qwen3-1.7b"))
+    model = build_model(cfg)
+    params = init_params(model.param_defs(), jax.random.PRNGKey(0))
+    reps = [_make_replica_sut(cfg, model, params, f"rep{i}")
+            for i in range(3)]
+    fleet = ReplicatedSUT(reps, name="fleet")
+    # 2 queries round-robin over 3 replicas: replica 2's share is empty
+    scenario = Server(target_qps=100.0, latency_slo_s=30.0,
+                      min_duration_s=0.0, min_queries=2, mode="queue")
+    director = Director(analyzer=VirtualAnalyzer(
+        AnalyzerSpec(sample_hz=1000.0), seed=0), seed=0)
+    r = PowerRun(fleet, scenario, seed=0, director=director).run()
+
+    assert not reps[2].completed and len(fleet.completed) == 2
+
+    times_s, watts = r.power_samples()
+    per_replica = fleet.replica_energy_j(r.outcome, times_s)
+    assert len(per_replica) == 3
+    # the idle replica is billed exactly its idle floor x window
+    window_s = float(times_s[-1] - times_s[0])
+    idle_w = float(reps[2].meter.system_watts(None))
+    assert per_replica[2] > 0.0
+    assert abs(per_replica[2] - idle_w * window_s) \
+        / (idle_w * window_s) < 1e-6
+    # serving replicas drew strictly more than the idle floor
+    assert per_replica[0] > per_replica[2]
+    assert per_replica[1] > per_replica[2]
+    # and attribution still sums to the measured fleet trace
+    fleet_trapz = float(_trapz(watts, times_s))
+    assert abs(sum(per_replica) - fleet_trapz) / fleet_trapz < 0.02
+
+
 def test_scaled_sysdesc_envelopes():
     """ShardedSUT / ReplicatedSUT declare scale-matched envelopes: tp
     chips on the meter, replica sums on the fleet description."""
